@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing: datasets, stores, timing."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.logstore.datasets import (LogDataset, extracted_term_queries,
+                                     generate_dataset, id_queries,
+                                     ip_queries, present_id_queries)
+from repro.logstore.store import ALL_STORES
+
+# laptop-scale stand-ins for the paper's 1M/5M datasets (Table 2):
+# statistically identical generator, smaller line counts so the whole
+# suite runs in minutes on 1 CPU core.
+DATASETS = {
+    "20k_generated": dict(n_lines=20_000, n_sources=48, seed=1),
+    "60k_generated": dict(n_lines=60_000, n_sources=160, seed=2),
+}
+
+
+def load_dataset(name: str) -> LogDataset:
+    return generate_dataset(name, **DATASETS[name])
+
+
+_DW_BITS: dict = {}  # dataset -> DynaWarp sketch bits (sizes CSC, §5.1.3)
+
+
+def build_store(name: str, ds: LogDataset, **kw):
+    if name == "csc" and "m_bits" not in kw and ds.name in _DW_BITS:
+        # paper protocol: CSC sized at the next power of two above the
+        # DynaWarp sketch
+        bits = _DW_BITS[ds.name]
+        kw["m_bits"] = 1 << max(int(bits) - 1, 6).bit_length()
+    store = ALL_STORES[name](batch_lines=64, **kw)
+    store.ingest(ds.lines)
+    store.finish()
+    if name == "dynawarp":
+        _DW_BITS[ds.name] = store.stats.index_bytes * 8
+    return store
+
+
+def time_queries(fn, queries, *, min_time_s: float = 0.5):
+    """Paper protocol: warm-up + timed iterations; returns queries/sec."""
+    for q in queries[:3]:
+        fn(q)
+    n, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < min_time_s:
+        fn(queries[n % len(queries)])
+        n += 1
+    return n / (time.perf_counter() - t0)
+
+
+QUERY_SCENARIOS = {
+    "term(ID)": lambda ds, s: (id_queries(11, 20), s.query_term),
+    "contains(ID)": lambda ds, s: (
+        [q[2:14] for q in present_id_queries(ds, 13, 20)],
+        s.query_contains),
+    "term(IP)": lambda ds, s: (ip_queries(17, 20), s.query_term),
+    # partial IPs ACROSS token borders: low-selectivity numeric n-grams —
+    # the paper's worst case for sketches (Table 3 contains(IP))
+    "contains(IP)": lambda ds, s: (
+        [q[2:-1] for q in ip_queries(23, 10)], s.query_contains),
+    "term(extracted)": lambda ds, s: (
+        extracted_term_queries(ds, 19, 20), s.query_term),
+}

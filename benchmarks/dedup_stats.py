@@ -1,0 +1,41 @@
+"""§3.2 claims: posting-list dedup (>88% fewer lists than tokens) and
+fingerprints vs full tokens memory saving (~75%)."""
+import numpy as np
+
+from .common import load_dataset
+from repro.core.batch_builder import build_sealed_from_lines
+from repro.core.hashing import token_fingerprint
+from repro.core.tokenizer import tokenize_line
+
+
+def run(results: dict):
+    ds = load_dataset("20k_generated")
+    token_sets = []   # token byte-strings per batch (for memory stats)
+    fp_sets = []      # fingerprint sets per batch (builder input)
+    batch = 64
+    for b in range(0, ds.n_lines, batch):
+        toks = set()
+        for line in ds.lines[b:b + batch]:
+            toks |= tokenize_line(line)
+        token_sets.append(toks)
+        fp_sets.append({token_fingerprint(t) for t in toks})
+    stats: dict = {}
+    sealed = build_sealed_from_lines(fp_sets, stats=stats)
+    n_tokens = len(sealed.fps)
+    n_lists = len(sealed.lists)
+    dedup_pct = 100.0 * (1 - n_lists / max(n_tokens, 1))
+    # memory: 4-byte fingerprints vs raw token bytes
+    token_bytes = sum(sum(len(t) for t in ts) for ts in token_sets)
+    uniq_tokens = set()
+    for ts in token_sets:
+        uniq_tokens |= ts
+    uniq_bytes = sum(len(t) for t in uniq_tokens)
+    fp_saving_pct = 100.0 * (1 - 4.0 * len(uniq_tokens) / max(uniq_bytes, 1))
+    results["dedup_stats"] = dict(
+        n_unique_tokens=n_tokens, n_posting_lists=n_lists,
+        list_dedup_pct=round(dedup_pct, 1),
+        fingerprint_memory_saving_pct=round(fp_saving_pct, 1))
+    print(f"[dedup] tokens {n_tokens} -> lists {n_lists} "
+          f"({dedup_pct:.1f}% dedup; paper: >88%)", flush=True)
+    print(f"[dedup] fingerprint memory saving vs full tokens: "
+          f"{fp_saving_pct:.1f}% (paper: 75%)", flush=True)

@@ -1,0 +1,26 @@
+"""Fig. 5: disk usage split into compressed data vs index/sketch."""
+from .common import DATASETS, build_store, load_dataset
+
+
+def run(results: dict):
+    table = {}
+    for ds_name in DATASETS:
+        ds = load_dataset(ds_name)
+        raw = ds.raw_bytes()
+        for store_name in ("dynawarp", "csc", "lucene", "bloom", "scan"):
+            s = build_store(store_name, ds)
+            st = s.stats
+            over_data = st.index_bytes / max(st.data_bytes, 1)
+            over_raw = st.index_bytes / max(raw, 1)
+            table[f"{ds_name}/{store_name}"] = dict(
+                raw_bytes=raw, data_bytes=st.data_bytes,
+                index_bytes=st.index_bytes,
+                index_over_data_pct=round(100 * over_data, 1),
+                index_over_raw_pct=round(100 * over_raw, 2),
+            )
+            print(f"[disk] {ds_name:14s} {store_name:9s} data "
+                  f"{st.data_bytes/1e6:7.2f}MB index "
+                  f"{st.index_bytes/1e6:7.2f}MB "
+                  f"({100*over_data:6.1f}% of data, "
+                  f"{100*over_raw:5.2f}% of raw)", flush=True)
+    results["disk_usage"] = table

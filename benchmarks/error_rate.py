@@ -1,0 +1,29 @@
+"""§5.2 error rates: false-positive batches / total batches, DynaWarp vs
+CSC vs Bloom, on the term(ID) and term(IP) scenarios (the paper's
+4-orders-of-magnitude claim lives here)."""
+import numpy as np
+
+from .common import build_store, load_dataset
+from repro.logstore.datasets import id_queries, ip_queries
+
+
+def run(results: dict):
+    table = {}
+    ds = load_dataset("60k_generated")
+    stores = {n: build_store(n, ds) for n in ("dynawarp", "csc", "bloom")}
+    scenarios = {"term(ID)": id_queries(23, 60),
+                 "term(IP)": ip_queries(29, 60)}
+    for scen, queries in scenarios.items():
+        for sname, s in stores.items():
+            rates = [s.query_term(q).error_rate for q in queries]
+            mean = float(np.mean(rates))
+            table[f"{scen}/{sname}"] = mean
+            print(f"[error] {scen:10s} {sname:9s} error rate "
+                  f"{mean:.3e}", flush=True)
+        dw, csc = table[f"{scen}/dynawarp"], table[f"{scen}/csc"]
+        if dw > 0:
+            print(f"[error] {scen}: CSC/DynaWarp fp ratio "
+                  f"{csc/dw:.1f}x", flush=True)
+        table[f"{scen}/csc_over_dynawarp"] = (csc / dw) if dw > 0 \
+            else float("inf") if csc > 0 else 1.0
+    results["error_rate"] = table

@@ -1,0 +1,25 @@
+"""Fig. 4: ingest speed per store x dataset (tokenize+index+compress,
+sketch_finish, data_finish)."""
+from .common import DATASETS, build_store, load_dataset
+
+
+def run(results: dict):
+    table = {}
+    for ds_name in DATASETS:
+        ds = load_dataset(ds_name)
+        for store_name in ("dynawarp", "csc", "lucene", "bloom", "scan"):
+            s = build_store(store_name, ds)
+            st = s.stats
+            table[f"{ds_name}/{store_name}"] = dict(
+                ingest_s=round(st.ingest_s, 3),
+                sketch_finish_s=round(st.sketch_finish_s, 3),
+                data_finish_s=round(st.data_finish_s, 3),
+                lines_per_s=round(ds.n_lines / max(st.ingest_s, 1e-9)),
+                tokens_indexed=st.n_tokens_indexed,
+            )
+            print(f"[ingest] {ds_name:14s} {store_name:9s} "
+                  f"ingest {st.ingest_s:6.2f}s finish "
+                  f"{st.sketch_finish_s:5.2f}s "
+                  f"({table[f'{ds_name}/{store_name}']['lines_per_s']}/s)",
+                  flush=True)
+    results["ingest_speed"] = table

@@ -1,0 +1,28 @@
+"""Table 3: query throughput (queries/s) per scenario x store x dataset.
+Cold-ish protocol: every query decompresses + Boyer-Moore-post-filters
+its candidate batches, so false positives cost real work."""
+from .common import (DATASETS, QUERY_SCENARIOS, build_store, load_dataset,
+                     time_queries)
+
+
+def run(results: dict):
+    table = {}
+    for ds_name in DATASETS:
+        ds = load_dataset(ds_name)
+        stores = {n: build_store(n, ds)
+                  for n in ("dynawarp", "csc", "lucene", "bloom", "scan")}
+        for scen, make in QUERY_SCENARIOS.items():
+            for sname, s in stores.items():
+                queries, fn = make(ds, s)
+                qps = time_queries(fn, queries)
+                table[f"{ds_name}/{scen}/{sname}"] = round(qps, 2)
+                print(f"[query] {ds_name:14s} {scen:16s} {sname:9s} "
+                      f"{qps:10.2f} q/s", flush=True)
+        # paper headline: needle-in-haystack speedup vs linear scan
+        base = table[f"{ds_name}/term(ID)/scan"]
+        for sname in ("dynawarp", "csc", "lucene"):
+            spd = table[f"{ds_name}/term(ID)/{sname}"] / max(base, 1e-9)
+            table[f"{ds_name}/term(ID)/{sname}_speedup_vs_scan"] = round(spd, 1)
+            print(f"[query] {ds_name} term(ID) {sname} speedup vs scan: "
+                  f"{spd:.0f}x", flush=True)
+    results["query_throughput"] = table

@@ -1,0 +1,112 @@
+"""§Roofline report generator: reads the dry-run JSON and emits the
+per-(arch x shape x mesh) table with the three roofline terms, dominant
+bottleneck, MODEL_FLOPS = 6*N*D (or 6*N_active*D), and the useful-FLOPs
+ratio.  Markdown output feeds EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+
+from repro.configs import ARCHS, get_arch
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS per step (GLOBAL, schedule-independent)."""
+    spec = get_arch(arch_id)
+    cfg = spec.config
+    shape = spec.shapes[shape_name]
+    d = shape.dims
+    if spec.family == "lm":
+        n_act = cfg.active_param_count()
+        if shape.kind == "train":
+            tokens = d["batch"] * d["seq"]
+            return 6.0 * n_act * tokens
+        if shape.kind == "prefill":
+            return 2.0 * n_act * d["batch"] * d["seq"]
+        # decode: one token per sequence
+        return 2.0 * n_act * d["batch"]
+    if spec.family == "gnn":
+        # per-edge/per-node MLP matmuls, fwd+bwd (x3 fwd-equivalents x2)
+        h, m = cfg.d_hidden, cfg.mlp_layers
+        def mlp_params(din, dout):
+            sizes = [din] + [h] * m + [dout]
+            return sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+        per_edge = mlp_params(3 * h, h)
+        per_node = mlp_params(2 * h, h)
+        enc = (d["n_edges"] * mlp_params(cfg.d_edge_in, h)
+               + d["n_nodes"] * mlp_params(d.get("d_feat", 100), h)
+               + d["n_nodes"] * mlp_params(h, cfg.d_out))
+        body = cfg.n_layers * (d["n_edges"] * per_edge
+                               + d["n_nodes"] * per_node)
+        return 6.0 * (enc + body)
+    # recsys: per-example dense interaction + MLP params
+    n_dense = cfg.param_count() - getattr(cfg, "total_vocab", 0) * \
+        getattr(cfg, "embed_dim", 0)
+    if arch_id == "sasrec":
+        n_dense = cfg.param_count() - cfg.n_items * cfg.embed_dim
+    if arch_id == "mind":
+        n_dense = cfg.param_count() - cfg.n_items * cfg.embed_dim
+    if arch_id == "two-tower-retrieval":
+        n_dense = cfg.param_count() - (cfg.n_user_fields
+                                       + cfg.n_item_fields) \
+            * cfg.field_vocab * cfg.field_dim - cfg.n_corpus \
+            * cfg.tower_mlp[-1]
+    mult = 6.0 if shape.kind == "train" else 2.0
+    examples = d.get("batch", 1) * (d.get("n_candidates", 1)
+                                    if shape.kind == "retrieval" else 1)
+    return mult * max(n_dense, 1) * examples / 1.0
+
+
+def render(results_path: str = "/root/repo/dryrun_results.json",
+           out_path: str | None = None) -> str:
+    rs = json.load(open(results_path))
+    lines = [
+        "| arch | shape | mesh | chips | compute s | memory s | "
+        "collective s | dominant | MODEL_FLOPS | HLO/dev FLOPs | "
+        "useful ratio | live GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | — | skipped | — | — | — | — | "
+                         f"{r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR {r['error'][:60]} |")
+            continue
+        t = r["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: t[k])[:-2]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["per_device"]["flops"] * r["n_chips"]
+        ratio = mf / hlo_global if hlo_global else float("nan")
+        live = r["per_device"]["live_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {dom} | {mf:.3e} "
+            f"| {r['per_device']['flops']:.3e} | {ratio:.2f} "
+            f"| {live:.2f} | {'Y' if live <= 16 else 'cpu-f32*'} |")
+    md = "\n".join(lines)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(md + "\n")
+    return md
+
+
+def run(results: dict):
+    import os
+    path = "/root/repo/dryrun_results.json"
+    if not os.path.exists(path):
+        print("[roofline] dryrun_results.json missing — run "
+              "python -m repro.launch.dryrun --all first", flush=True)
+        return
+    md = render(path, "/root/repo/roofline_table.md")
+    n_rows = md.count("\n") - 1
+    results["roofline"] = dict(rows=n_rows, table_file="roofline_table.md")
+    print(f"[roofline] wrote roofline_table.md ({n_rows} rows)", flush=True)
+
+
+if __name__ == "__main__":
+    print(render())

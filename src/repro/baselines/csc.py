@@ -1,0 +1,120 @@
+"""Circular Shift and Coalesce (CSC) membership sketch — Li et al.,
+SIGMOD'21 (the paper's [19]); the sketch baseline in §2.2/§5.
+
+For each of ``k`` hash functions, a token's anchor position
+``h(t) mod m`` is shifted by the partition ``g(S) = S mod p`` of each set
+it belongs to, and that bit is set.  A query gathers the ``p`` bits after
+each anchor, ANDs the partition masks across the k anchors (and across
+``j`` independent repetitions), then expands surviving partitions to the
+union of sets they contain.  ``m`` is a power of two so the modulo is a
+mask, exactly as in the paper's evaluation setup (§5.1.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core.hashing import np_seeded_hash32
+
+_HASH_SEED = 0xC5C0FFEE
+
+
+def _seed(rep: int, k: int) -> int:
+    return (_HASH_SEED + 0x9E3779B9 * (rep * 131 + k)) & 0xFFFFFFFF
+
+
+@dataclass
+class CSCSketch:
+    bits: np.ndarray        # (j, m/32) uint32 — one bit plane per repetition
+    m: int                  # power-of-two bit-vector size
+    k: int                  # hash functions per repetition
+    p: int                  # partitions
+    j: int                  # repetitions
+    n_sets: int
+
+    def size_bits(self) -> int:
+        return self.bits.size * 32
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, *, m_bits: int, k: int = 4, p: int = 64, j: int = 1,
+              n_sets: int = 0) -> "CSCSketch":
+        m = 1 << int(np.ceil(np.log2(max(m_bits, 64))))
+        return cls(bits=np.zeros((j, m >> 5), dtype=np.uint32),
+                   m=m, k=k, p=p, j=j, n_sets=n_sets)
+
+    def insert_batch(self, fps: np.ndarray, set_ids: np.ndarray) -> None:
+        """Vectorized insert of parallel (token fingerprint, set id) pairs."""
+        fps = np.asarray(fps, dtype=np.uint32)
+        set_ids = np.asarray(set_ids, dtype=np.int64)
+        self.n_sets = max(self.n_sets, int(set_ids.max(initial=-1)) + 1)
+        g = (set_ids % self.p).astype(np.int64)
+        mask = np.uint32(self.m - 1)
+        for rep in range(self.j):
+            for hk in range(self.k):
+                anchor = np_seeded_hash32(fps, _seed(rep, hk)) & mask
+                pos = (anchor.astype(np.int64) + g) & (self.m - 1)
+                np.bitwise_or.at(self.bits[rep], pos >> 5,
+                                 np.uint32(1) << (pos & 31).astype(np.uint32))
+
+    # ------------------------------------------------------------------ query
+    def partition_mask(self, fps: np.ndarray) -> np.ndarray:
+        """(Q, p) bool — surviving partitions per query token (AND across
+        k anchors and j repetitions)."""
+        fps = np.asarray(fps, dtype=np.uint32)
+        mask = np.uint32(self.m - 1)
+        out = np.ones((fps.size, self.p), dtype=bool)
+        for rep in range(self.j):
+            for hk in range(self.k):
+                anchor = np_seeded_hash32(fps, _seed(rep, hk)) & mask
+                pos = (anchor[:, None].astype(np.int64)
+                       + np.arange(self.p)[None, :]) & (self.m - 1)
+                bit = (self.bits[rep][pos >> 5]
+                       >> (pos & 31).astype(np.uint32)) & 1
+                out &= bit.astype(bool)
+        return out
+
+    def query(self, fp: int) -> np.ndarray:
+        """Membership set M_t: all set ids whose partition survived."""
+        parts = self.partition_mask(np.asarray([fp], np.uint32))[0]
+        if self.n_sets == 0:
+            return np.empty(0, np.int64)
+        sets = np.arange(self.n_sets, dtype=np.int64)
+        return sets[parts[sets % self.p]]
+
+    def query_all_tokens(self, fps: np.ndarray) -> np.ndarray:
+        """AND-combined membership across tokens (n-gram intersection mode
+        used in §5.2 to lower CSC's error rate)."""
+        if len(fps) == 0:
+            return np.empty(0, np.int64)
+        parts = self.partition_mask(np.asarray(fps, np.uint32))
+        combined = parts.all(axis=0)
+        sets = np.arange(self.n_sets, dtype=np.int64)
+        return sets[combined[sets % self.p]]
+
+    # ------------------------------------------------------------------ device
+    def device_arrays(self) -> dict:
+        return dict(bits=jnp.asarray(self.bits))
+
+    def partition_mask_jnp(self, fps, arrs=None):
+        """jnp oracle for the csc_probe Pallas kernel."""
+        from ..core.hashing import seeded_hash32
+        if arrs is None:
+            arrs = self.device_arrays()
+        bits = arrs["bits"]
+        fps = fps.astype(jnp.uint32)
+        mask = jnp.uint32(self.m - 1)
+        out = jnp.ones((fps.shape[0], self.p), dtype=jnp.bool_)
+        for rep in range(self.j):
+            for hk in range(self.k):
+                anchor = seeded_hash32(fps, _seed(rep, hk)) & mask
+                pos = (anchor[:, None].astype(jnp.int32)
+                       + jnp.arange(self.p, dtype=jnp.int32)[None, :]) \
+                    & jnp.int32(self.m - 1)
+                w = bits[rep][pos >> 5]
+                bit = (w >> (pos & 31).astype(jnp.uint32)) & 1
+                out = out & bit.astype(jnp.bool_)
+        return out

@@ -1,0 +1,139 @@
+"""Config substrate: ArchSpec / ShapeSpec and the input_specs() contract.
+
+Every assigned architecture registers an ArchSpec carrying
+  * the exact published model config,
+  * its own shape set (each cell of the dry-run matrix),
+  * a reduced smoke config (same family, CPU-runnable),
+  * family-specific step kinds ('train' | 'prefill' | 'decode' |
+    'serve' | 'retrieval').
+
+``input_specs(arch, shape)`` returns jax.ShapeDtypeStruct stand-ins for
+every input of the lowered step — weak-type-correct, shardable, zero
+allocation — exactly what jit(...).lower() consumes for the multi-pod
+dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape),
+                                jnp.dtype(dtype))
+
+
+def pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                    # train|prefill|decode|serve|retrieval
+    dims: dict = field(default_factory=dict)
+    n_microbatches: int = 1      # LM train grad-accumulation
+    decode_policy: str = "batch"  # 'batch' | 'seq': cache sharding axis
+    skip: str | None = None      # reason string if the cell is skipped
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str                  # lm|gnn|recsys
+    source: str                  # citation tag from the assignment
+    config: Any                  # family config dataclass (full size)
+    shapes: dict                 # name -> ShapeSpec
+    smoke_config: Any            # reduced config, CPU-runnable
+    optimizer: str = "adamw"     # adamw | adafactor
+    grad_accum_dtype: str = "float32"
+    fsdp: bool = False           # shard params over 'data' as well
+    notes: str = ""
+    inputs: Callable = None      # (config, ShapeSpec) -> ShapeDtypeStruct tree
+    smoke_batch: Callable = None  # (smoke_config, rng) -> real small batch
+
+    def shape(self, name: str) -> ShapeSpec:
+        return self.shapes[name]
+
+    def cells(self):
+        """All (arch, shape) dry-run cells incl. skipped ones."""
+        return [(self.id, s) for s in self.shapes]
+
+
+# ------------------------------------------------------- LM input specs
+LM_SHAPES = dict(
+    train_4k=dict(seq=4096, batch=256),
+    prefill_32k=dict(seq=32768, batch=32),
+    decode_32k=dict(seq=32768, batch=128),
+    long_500k=dict(seq=524288, batch=1),
+)
+
+
+def lm_shapes(*, n_micro: dict | None = None, skip_long: str | None = None):
+    n_micro = n_micro or {}
+    return {
+        "train_4k": ShapeSpec("train_4k", "train", LM_SHAPES["train_4k"],
+                              n_microbatches=n_micro.get("train_4k", 4)),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                 LM_SHAPES["prefill_32k"]),
+        "decode_32k": ShapeSpec("decode_32k", "decode",
+                                LM_SHAPES["decode_32k"],
+                                decode_policy="batch"),
+        "long_500k": ShapeSpec("long_500k", "decode",
+                               LM_SHAPES["long_500k"],
+                               decode_policy="seq", skip=skip_long),
+    }
+
+
+def lm_input_specs(cfg, shape: ShapeSpec):
+    b, s = shape.dims["batch"], shape.dims["seq"]
+    if shape.kind == "train":
+        return {"tokens": sds((b, s), "int32"),
+                "labels": sds((b, s), "int32"),
+                "mask": sds((b, s), "float32")}
+    if shape.kind == "prefill":
+        return {"tokens": sds((b, s), "int32")}
+    if shape.kind == "decode":
+        cache_shape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim)
+        return {"cache": {"k": sds(cache_shape, cfg.dtype),
+                          "v": sds(cache_shape, cfg.dtype)},
+                "tokens": sds((b,), "int32")}
+    raise ValueError(shape.kind)
+
+
+# ------------------------------------------------------ GNN input specs
+def gnn_input_specs(cfg, shape: ShapeSpec):
+    d = shape.dims
+    n, e = d["n_nodes"], d["n_edges"]
+    return {"nodes": sds((n, d["d_feat"]), cfg.dtype),
+            "edges": sds((e, cfg.d_edge_in), cfg.dtype),
+            "senders": sds((e,), "int32"),
+            "receivers": sds((e,), "int32"),
+            "edge_mask": sds((e,), cfg.dtype),
+            "node_mask": sds((n,), cfg.dtype),
+            "targets": sds((n, cfg.d_out), cfg.dtype)}
+
+
+# --------------------------------------------------- RecSys input specs
+RECSYS_SHAPES = dict(
+    train_batch=dict(batch=65536),
+    serve_p99=dict(batch=512),
+    serve_bulk=dict(batch=262144),
+    retrieval_cand=dict(batch=1, n_candidates=1_048_576),  # 1M padded /512
+)
+
+
+def recsys_shapes():
+    return {
+        "train_batch": ShapeSpec("train_batch", "train",
+                                 RECSYS_SHAPES["train_batch"]),
+        "serve_p99": ShapeSpec("serve_p99", "serve",
+                               RECSYS_SHAPES["serve_p99"]),
+        "serve_bulk": ShapeSpec("serve_bulk", "serve",
+                                RECSYS_SHAPES["serve_bulk"]),
+        "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                    RECSYS_SHAPES["retrieval_cand"]),
+    }

@@ -1,0 +1,34 @@
+"""The paper's own configuration: DynaWarp sketch + log-store parameters
+(§4/§5 of the paper) — selectable via --arch dynawarp (alias: copr).
+
+These defaults mirror the reference implementation:
+  * 4-byte token fingerprints (2^32 hash space, §4.1)
+  * short/long posting-list threshold 16, max 2^16 postings per sketch
+  * 8 signature bits (false-positive factor 2^-8, §3.3)
+  * BBHash gamma 2.0 (construction-speed-optimal per [20])
+  * 512-line compressed batches, zstd level 3, 32 MB mutable-sketch
+    memory budget before internal segmentation (§4.3, §5.1.1)
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DynaWarpConfig:
+    name: str = "dynawarp"
+    fingerprint_bytes: int = 4
+    sig_bits: int = 8
+    short_list_max: int = 16
+    max_postings: int = 1 << 16
+    bbhash_gamma: float = 2.0
+    batch_lines: int = 512
+    zstd_level: int = 3
+    memory_limit_bytes: int = 32 << 20
+    ngrams: bool = True
+    # distributed probe layout (launch/dryrun exercises these)
+    segments_axis: str = "data"      # segments shard over data (x pod)
+    words_axis: str = "model"        # bitmap words shard over model
+
+
+CONFIG = DynaWarpConfig()
+SMOKE = DynaWarpConfig(name="dynawarp-smoke", batch_lines=32,
+                       memory_limit_bytes=1 << 14)

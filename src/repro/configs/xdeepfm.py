@@ -1,0 +1,47 @@
+"""xdeepfm [arXiv:1803.05170; paper]: n_sparse=39 embed_dim=10
+cin_layers=200-200-200 mlp=400-400 interaction=cin.
+
+Embedding substrate: 39 hashed fields x 1M rows x dim 10 = 390M rows,
+one concatenated table row-sharded over 'model' (the huge_embedding axis).
+"""
+import numpy as np
+
+from ..models.recsys import XDeepFMConfig
+from .base import ArchSpec, ShapeSpec, recsys_shapes, sds
+
+CONFIG = XDeepFMConfig(name="xdeepfm", n_sparse=39, vocab_per_field=1_000_000,
+                       embed_dim=10, cin_layers=(200, 200, 200),
+                       mlp_sizes=(400, 400))
+
+SMOKE = XDeepFMConfig(name="xdeepfm-smoke", n_sparse=5, vocab_per_field=128,
+                      embed_dim=8, cin_layers=(8, 8), mlp_sizes=(16, 16))
+
+
+def inputs(cfg, shape):
+    d = shape.dims
+    if shape.kind == "train":
+        return {"idx": sds((d["batch"], cfg.n_sparse), "int32"),
+                "label": sds((d["batch"],), "float32")}
+    if shape.kind == "serve":
+        return {"idx": sds((d["batch"], cfg.n_sparse), "int32")}
+    if shape.kind == "retrieval":
+        return {"idx": sds((1, cfg.n_sparse), "int32"),
+                "cand": sds((d["n_candidates"],), "int32")}
+    raise ValueError(shape.kind)
+
+
+def smoke_batch(cfg, rng):
+    import jax.numpy as jnp
+    b = 16
+    return {"idx": jnp.asarray(
+        rng.integers(0, cfg.vocab_per_field, (b, cfg.n_sparse)), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, b), jnp.float32)}
+
+
+SPEC = ArchSpec(
+    id="xdeepfm", family="recsys", source="arXiv:1803.05170; paper",
+    config=CONFIG, smoke_config=SMOKE, shapes=recsys_shapes(),
+    optimizer="adamw",
+    inputs=inputs, smoke_batch=smoke_batch,
+    notes="CIN interaction; retrieval_cand = bulk CIN scoring of 1M "
+          "candidate ids at field 0")

@@ -1,0 +1,154 @@
+"""Distributed sketch probe — the paper's horizontal scaling (§3, §6)
+mapped onto the production mesh.
+
+Grail assigns immutable segments to query workers; a query fans out to
+every segment's sketch and unions/intersects the per-segment candidate
+sets.  Here that becomes data parallelism over the mesh:
+
+  * the S segment sketches are stacked into dense device arrays
+    (words / block_rank padded to a common size) and sharded over
+    ('pod','data') — segment parallelism,
+  * bitmap words of the posting planes shard over 'model',
+  * one batched query evaluates Q tokens x S segments in a single
+    shard_map: each shard probes its local segments with the SAME kernel
+    the single-segment path uses, then the AND/OR combine runs on the
+    local (Q, S_local) hit matrices — no cross-shard traffic until the
+    final candidate gather (an all-gather of Q x S_local bitmaps).
+
+This module is pure JAX (works on the 1-device smoke mesh); the Pallas
+kernels slot in transparently through kernels/sketch_probe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .hashing import seeded_hash32
+from .mphf import MPHF, RANK_BLOCK_WORDS, _level_seed
+
+
+@dataclass
+class StackedSketches:
+    """S segment MPHFs padded into dense (S, ...) arrays."""
+    words: jnp.ndarray            # (S, W) uint32
+    block_rank: jnp.ndarray       # (S, RB) uint32
+    level_bits: np.ndarray        # (S, L) int32 (host; static per probe)
+    level_word_offset: np.ndarray  # (S, L+1) int32
+    signatures: jnp.ndarray | None  # (S, K) uint8 per-key signature bits
+    n_segments: int
+
+    @classmethod
+    def stack(cls, mphfs: list[MPHF], signatures=None) -> "StackedSketches":
+        s = len(mphfs)
+        w = max(m.words.size for m in mphfs)
+        rb = max(m.block_rank.size for m in mphfs)
+        lmax = max(m.n_levels for m in mphfs)
+        words = np.zeros((s, w), np.uint32)
+        rank = np.zeros((s, rb), np.uint32)
+        lbits = np.zeros((s, lmax), np.int32)
+        loff = np.zeros((s, lmax + 1), np.int32)
+        for i, m in enumerate(mphfs):
+            words[i, :m.words.size] = m.words
+            rank[i, :m.block_rank.size] = m.block_rank
+            lbits[i, :m.n_levels] = m.level_bits
+            loff[i, :m.n_levels + 1] = m.level_word_offset
+        return cls(words=jnp.asarray(words), block_rank=jnp.asarray(rank),
+                   level_bits=lbits, level_word_offset=loff,
+                   signatures=signatures, n_segments=s)
+
+
+def probe_one_segment(words, block_rank, fps, level_bits, level_word_offset):
+    """Vectorized MPHF probe of ONE segment (jnp; mirrors MPHF.lookup_jnp
+    but with static per-segment level metadata)."""
+    idx = jnp.zeros(fps.shape, jnp.int32)
+    found = jnp.zeros(fps.shape, bool)
+    nw = words.shape[0]
+    for lvl, m in enumerate(level_bits):
+        m = int(m)
+        if m == 0:
+            continue
+        pos = seeded_hash32(fps, _level_seed(lvl)) % jnp.uint32(m)
+        gbit = pos.astype(jnp.int32) + (int(level_word_offset[lvl]) << 5)
+        word = gbit >> 5
+        wv = words[word]
+        hit = ((wv >> (gbit & 31).astype(jnp.uint32)) & 1).astype(bool)
+        hit = hit & ~found
+        block = word >> 3
+        r = block_rank[block].astype(jnp.int32)
+        base = block << 3
+        for j in range(RANK_BLOCK_WORDS):
+            wj = jnp.minimum(base + j, nw - 1)
+            wjv = words[wj]
+            pc = jax.lax.population_count(wjv).astype(jnp.int32)
+            pmask = (jnp.uint32(1) << (gbit & 31).astype(jnp.uint32)) \
+                - jnp.uint32(1)
+            pcp = jax.lax.population_count(wjv & pmask).astype(jnp.int32)
+            r = r + jnp.where(base + j < word, pc, 0) \
+                + jnp.where(base + j == word, pcp, 0)
+        idx = jnp.where(hit, r, idx)
+        found = found | hit
+    return idx, ~found
+
+
+def distributed_probe(stacked: StackedSketches, fps, mesh=None,
+                      segment_axes=("data",)):
+    """Probe Q fingerprints against S segments.
+
+    Returns (idx (S, Q) int32, absent (S, Q) bool).  With a mesh, the
+    segment dim shards over ``segment_axes`` and each shard probes only
+    its local segments (shard_map); without a mesh it runs as a plain
+    loop (smoke path).  Level metadata is static per segment, so the
+    probe unrolls per segment — segments per shard stay small (S/shards).
+    """
+    fps = jnp.asarray(fps, jnp.uint32)
+    s = stacked.n_segments
+
+    def probe_block(words_blk, rank_blk, seg_ids):
+        outs_i, outs_a = [], []
+        for i, seg in enumerate(seg_ids):
+            idx, absent = probe_one_segment(
+                words_blk[i], rank_blk[i], fps,
+                stacked.level_bits[seg], stacked.level_word_offset[seg])
+            outs_i.append(idx)
+            outs_a.append(absent)
+        return jnp.stack(outs_i), jnp.stack(outs_a)
+
+    if mesh is None:
+        return probe_block(stacked.words, stacked.block_rank, range(s))
+
+    n_shards = 1
+    for a in segment_axes:
+        n_shards *= mesh.shape[a]
+    assert s % n_shards == 0, (s, n_shards)
+
+    # homogeneous-metadata fast path: when every segment shares the level
+    # layout (common: same gamma/size class), the probe vmaps cleanly.
+    homogeneous = bool(
+        (stacked.level_bits == stacked.level_bits[0]).all()
+        and (stacked.level_word_offset == stacked.level_word_offset[0]).all())
+    if homogeneous:
+        def one(words_row, rank_row):
+            return probe_one_segment(words_row, rank_row, fps,
+                                     stacked.level_bits[0],
+                                     stacked.level_word_offset[0])
+        vprobe = jax.vmap(one)
+        spec = P(segment_axes, None)
+        with mesh:
+            words = jax.device_put(stacked.words,
+                                   NamedSharding(mesh, spec))
+            rank = jax.device_put(stacked.block_rank,
+                                  NamedSharding(mesh, spec))
+            out = jax.jit(vprobe,
+                          in_shardings=(NamedSharding(mesh, spec),
+                                        NamedSharding(mesh, spec)),
+                          out_shardings=(NamedSharding(mesh, P(segment_axes,
+                                                               None)),) * 2
+                          )(words, rank)
+        return out
+    # heterogeneous: per-segment unroll on host-visible metadata
+    return probe_block(stacked.words, stacked.block_rank, range(s))

@@ -1,0 +1,203 @@
+"""Hash primitives shared by the mutable/immutable sketches and the kernels.
+
+Every hash here exists in three synchronized forms:
+  * scalar python  (reference / host builders)
+  * vectorized numpy (batch builders, oracles)
+  * jnp            (device query path; the Pallas kernels mirror these ops)
+
+The paper (§3.2, Def. 3.1/3.2) requires
+  - a token fingerprint hash (4-byte fingerprints in the token map),
+  - a per-posting element hash implemented as one LCG step
+    (Steele & Vigna multipliers), combined with XOR into the commutative
+    *postings hash* used for online posting-list deduplication.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# --- constants -------------------------------------------------------------
+U32 = 0xFFFFFFFF
+U64 = 0xFFFFFFFFFFFFFFFF
+
+# polynomial rolling-hash multiplier (golden-ratio odd constant)
+POLY_M32 = 0x9E3779B1
+POLY_SEED = 0x811C9DC5  # FNV offset basis, reused as seed
+
+# 64-bit LCG from Steele & Vigna, "Computationally easy, spectrally good
+# multipliers for congruential pseudorandom number generators" (paper's [44]).
+LCG_A = 0xD1342543DE82EF95
+LCG_C = 0x2545F4914F6CDD1D
+
+# murmur3 fmix32 constants
+_FM32_1 = 0x85EBCA6B
+_FM32_2 = 0xC2B2AE35
+# splitmix64 fmix constants
+_FM64_1 = 0xBF58476D1CE4E5B9
+_FM64_2 = 0x94D049BB133111EB
+
+
+# --- scalar (python int) ----------------------------------------------------
+def fmix32(h: int) -> int:
+    h &= U32
+    h ^= h >> 16
+    h = (h * _FM32_1) & U32
+    h ^= h >> 13
+    h = (h * _FM32_2) & U32
+    h ^= h >> 16
+    return h
+
+
+def fmix64(h: int) -> int:
+    h &= U64
+    h ^= h >> 30
+    h = (h * _FM64_1) & U64
+    h ^= h >> 27
+    h = (h * _FM64_2) & U64
+    h ^= h >> 31
+    return h
+
+
+def lcg_step(x: int) -> int:
+    """One LCG step (Def. 3.2): x_1 = (a * x_0 + c) mod 2^64."""
+    return (LCG_A * (x & U64) + LCG_C) & U64
+
+
+def posting_element_hash(p: int) -> int:
+    """hash_element(p) — Def. 3.1 uses one LCG step seeded with the posting."""
+    return lcg_step(p)
+
+
+def postings_hash(postings) -> int:
+    """Commutative XOR-combined hash of a set of postings (Def. 3.1)."""
+    h = 0
+    for p in postings:
+        h ^= posting_element_hash(int(p))
+    return h
+
+
+def token_fingerprint(token: bytes, *, seed: int = POLY_SEED) -> int:
+    """4-byte token fingerprint (token map key, §4.1)."""
+    h = seed & U32
+    for b in token:
+        h = ((h * POLY_M32) & U32) ^ b
+    return fmix32(h ^ (len(token) & U32))
+
+
+# --- numpy vectorized -------------------------------------------------------
+def np_fmix32(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint32, copy=True)
+    h ^= h >> np.uint32(16)
+    h *= np.uint32(_FM32_1)
+    h ^= h >> np.uint32(13)
+    h *= np.uint32(_FM32_2)
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def np_fmix64(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint64, copy=True)
+    h ^= h >> np.uint64(30)
+    h *= np.uint64(_FM64_1)
+    h ^= h >> np.uint64(27)
+    h *= np.uint64(_FM64_2)
+    h ^= h >> np.uint64(31)
+    return h
+
+
+def np_posting_element_hash(p: np.ndarray) -> np.ndarray:
+    p = p.astype(np.uint64)
+    return np.uint64(LCG_A) * p + np.uint64(LCG_C)
+
+
+def np_token_fingerprints(tokens_u8: np.ndarray, lengths: np.ndarray,
+                          *, seed: int = POLY_SEED) -> np.ndarray:
+    """Vectorized fingerprints for a packed (N, L) uint8 token matrix.
+
+    Bytes past ``lengths[i]`` must be zero-padded; they are masked out by
+    freezing the rolling state once the position index reaches the length.
+    """
+    n, max_len = tokens_u8.shape
+    h = np.full((n,), seed, dtype=np.uint32)
+    lengths = lengths.astype(np.int32)
+    for j in range(max_len):
+        active = j < lengths
+        nh = (h * np.uint32(POLY_M32)) ^ tokens_u8[:, j].astype(np.uint32)
+        h = np.where(active, nh, h)
+    return np_fmix32(h ^ lengths.astype(np.uint32))
+
+
+# --- jnp --------------------------------------------------------------------
+def jnp_fmix32(h):
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_FM32_1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_FM32_2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def jnp_posting_element_hash(p):
+    """uint32-pair LCG step (TPUs have no u64 — emulate with hi/lo pairs).
+
+    Returns (hi, lo) uint32 arrays such that (hi << 32) | lo equals the
+    64-bit LCG step. Used by the commutative postings hash on device.
+    """
+    p = p.astype(jnp.uint32)
+    a_lo = jnp.uint32(LCG_A & U32)
+    a_hi = jnp.uint32(LCG_A >> 32)
+    c_lo = jnp.uint32(LCG_C & U32)
+    c_hi = jnp.uint32(LCG_C >> 32)
+    # 32x32 -> 64 multiply via 16-bit limbs (TPU-safe)
+    lo, carry = _mul32_wide(a_lo, p)
+    hi = a_hi * p + carry
+    # add c
+    lo2 = lo + c_lo
+    hi = hi + c_hi + (lo2 < lo).astype(jnp.uint32)
+    return hi, lo2
+
+
+def _mul32_wide(a, b):
+    """(a * b) -> (lo32, hi32) using 16-bit limb decomposition."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    mid = (ll >> 16) + (lh & 0xFFFF) + (hl & 0xFFFF)
+    lo = (ll & 0xFFFF) | ((mid & 0xFFFF) << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return lo, hi
+
+
+def jnp_token_fingerprints(tokens_u8, lengths, *, seed: int = POLY_SEED):
+    """jnp mirror of :func:`np_token_fingerprints` (oracle for the kernel)."""
+    n, max_len = tokens_u8.shape
+    h = jnp.full((n,), seed, dtype=jnp.uint32)
+    idx = jnp.arange(max_len, dtype=jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    for j in range(max_len):
+        active = idx[j] < lengths
+        nh = (h * jnp.uint32(POLY_M32)) ^ tokens_u8[:, j].astype(jnp.uint32)
+        h = jnp.where(active, nh, h)
+    return jnp_fmix32(h ^ lengths.astype(jnp.uint32))
+
+
+def seeded_hash32(fp, seed: int):
+    """Per-level / per-purpose derived 32-bit hash of a fingerprint (jnp)."""
+    return jnp_fmix32(fp.astype(jnp.uint32) ^ jnp.uint32(seed & U32))
+
+
+def np_seeded_hash32(fp: np.ndarray, seed: int) -> np.ndarray:
+    return np_fmix32(fp.astype(np.uint32) ^ np.uint32(seed & U32))
+
+
+def scalar_seeded_hash32(fp: int, seed: int) -> int:
+    return fmix32((fp ^ seed) & U32)

@@ -1,0 +1,223 @@
+"""The immutable DynaWarp sketch (§3.3/§4.2): MPHF + signatures +
+compressed static function + BIC posting lists, in a single flat buffer.
+
+Build pipeline (host):
+  SealedContent -> rank lists by reference count -> MPHF over fingerprints
+  -> CSF(minimal hash -> rank) -> signature bits -> BIC bit stream.
+
+Query pipeline:
+  * host   : Algorithm 3 via numpy (query.py)
+  * device : batched jnp / Pallas probe over the flat uint32 buffers,
+             plus optional dense bitmap planes for on-device boolean
+             algebra across query tokens (TPU adaptation, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import bic
+from .bitio import BitWriter, np_peek_bits
+from .csf import CompressedStaticFunction, build_csf
+from .hashing import np_seeded_hash32, scalar_seeded_hash32, token_fingerprint
+from .mphf import MPHF, build_mphf
+from .mutable_sketch import SealedContent
+
+SIG_SEED = 0x516E4715
+DEFAULT_SIG_BITS = 8
+DEFAULT_PLANE_BUDGET = 64 << 20  # bytes of optional device bitmap planes
+
+
+@dataclass
+class ImmutableSketch:
+    mphf: MPHF
+    csf: CompressedStaticFunction
+    signatures: np.ndarray      # packed sig_bits-wide signatures by min-hash
+    sig_bits: int
+    bic_bits: np.ndarray        # u32 BIC stream of all deduplicated lists
+    bic_offsets: np.ndarray     # (L+1,) int64 bit offsets (rank -> offset)
+    bic_counts: np.ndarray      # (L,) int64 postings per list
+    n_postings: int
+    n_tokens: int
+    planes: np.ndarray | None = None   # (L, ceil(P/32)) u32 device bitmaps
+    stats: dict = field(default_factory=dict)
+
+    # ------------------------------------------------------------------ sizes
+    @property
+    def n_lists(self) -> int:
+        return len(self.bic_counts)
+
+    def size_bits(self, *, include_planes: bool = False) -> int:
+        total = (self.mphf.size_bits() + self.csf.size_bits()
+                 + self.signatures.size * 32
+                 + self.bic_bits.size * 32
+                 + self.bic_offsets.size * 64 + self.bic_counts.size * 16)
+        if include_planes and self.planes is not None:
+            total += self.planes.size * 32
+        return total
+
+    def size_bytes(self, **kw) -> int:
+        return (self.size_bits(**kw) + 7) // 8
+
+    # ------------------------------------------------------------------ query
+    def probe_fingerprints_np(self, fps: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched membership probe.  Returns (present bool, rank int64);
+        rank is only meaningful where present."""
+        fps = np.asarray(fps, dtype=np.uint32)
+        idx, absent = self.mphf.lookup_np(fps)
+        idx = np.clip(idx, 0, max(self.n_tokens - 1, 0))
+        sig = self._sig_at_np(idx)
+        want = np_seeded_hash32(fps, SIG_SEED) & np.uint32((1 << self.sig_bits) - 1)
+        present = (~absent) & (sig == want) & (self.n_tokens > 0)
+        rank = np.where(present, self.csf.get_np(idx), 0)
+        return present, rank
+
+    def probe_fp_scalar(self, fp: int) -> tuple[bool, int]:
+        """Single-fingerprint probe on the python-int fast path (Alg. 3
+        inner loop): MPHF -> signature -> CSF rank.  Avoids per-call numpy
+        dispatch (~40x for needle queries, EXPERIMENTS.md §Perf)."""
+        from .bitio import peek_bits
+        from .hashing import scalar_seeded_hash32
+        if self.n_tokens == 0:
+            return False, 0
+        idx, absent = self.mphf.lookup_scalar(fp)
+        if absent:
+            return False, 0
+        idx = min(idx, self.n_tokens - 1)
+        sig = peek_bits(self.signatures, idx * self.sig_bits, self.sig_bits)
+        want = scalar_seeded_hash32(fp, SIG_SEED) & ((1 << self.sig_bits) - 1)
+        if sig != want:
+            return False, 0
+        return True, self.csf.get_scalar(idx)
+
+    def _sig_at_np(self, idx: np.ndarray) -> np.ndarray:
+        bitpos = idx.astype(np.int64) * self.sig_bits
+        return np_peek_bits(self.signatures, bitpos,
+                            np.full(idx.shape, self.sig_bits, np.int64))
+
+    def postings_for_rank(self, rank: int) -> np.ndarray:
+        return bic.decode_list(self.bic_bits, self.bic_offsets,
+                               self.bic_counts, int(rank), self.n_postings)
+
+    def query_token(self, token: bytes) -> np.ndarray | None:
+        """Host single-token query: None if definitely/probably absent."""
+        fp = np.asarray([token_fingerprint(token)], dtype=np.uint32)
+        present, rank = self.probe_fingerprints_np(fp)
+        if not present[0]:
+            return None
+        return self.postings_for_rank(int(rank[0]))
+
+    # ---------------------------------------------------------------- device
+    def device_arrays(self) -> dict:
+        arrs = dict(self.mphf.device_arrays())
+        arrs.update({f"csf_{k}": v for k, v in self.csf.device_arrays().items()})
+        arrs["signatures"] = jnp.asarray(self.signatures)
+        if self.planes is not None:
+            arrs["planes"] = jnp.asarray(self.planes)
+        return arrs
+
+    def probe_fingerprints_jnp(self, fps, arrs=None):
+        """jnp oracle of the device probe (mirrors probe_fingerprints_np)."""
+        if arrs is None:
+            arrs = self.device_arrays()
+        fps = fps.astype(jnp.uint32)
+        idx, absent = self.mphf.lookup_jnp(fps, arrs)
+        idx = jnp.clip(idx, 0, max(self.n_tokens - 1, 0))
+        bitpos = idx * self.sig_bits
+        sig = _jnp_peek_fixed(arrs["signatures"], bitpos, self.sig_bits)
+        from .hashing import seeded_hash32
+        want = seeded_hash32(fps, SIG_SEED) & jnp.uint32((1 << self.sig_bits) - 1)
+        present = (~absent) & (sig == want)
+        csf_arrs = {k[len("csf_"):]: v for k, v in arrs.items()
+                    if k.startswith("csf_")}
+        rank = jnp.where(present, self.csf.get_jnp(idx, csf_arrs), 0)
+        return present, rank
+
+    def match_bitmap_jnp(self, fps, arrs=None):
+        """(Q, W) u32 posting bitmaps per query fingerprint; absent tokens
+        yield all-zero rows.  Requires bitmap planes."""
+        if self.planes is None:
+            raise ValueError("bitmap planes were not built for this sketch")
+        if arrs is None:
+            arrs = self.device_arrays()
+        present, rank = self.probe_fingerprints_jnp(fps, arrs)
+        rows = arrs["planes"][jnp.clip(rank, 0, self.n_lists - 1)]
+        return jnp.where(present[:, None], rows, jnp.uint32(0))
+
+
+def _jnp_peek_fixed(words, bitpos, nbits: int):
+    word = bitpos >> 5
+    off = (bitpos & 31).astype(jnp.uint32)
+    w0 = words[word]
+    w1 = words[jnp.minimum(word + 1, words.shape[0] - 1)]
+    lo = w0 >> off
+    hi = jnp.where(off > 0, w1 << (jnp.uint32(32) - off), jnp.uint32(0))
+    return (lo | hi) & jnp.uint32((1 << nbits) - 1)
+
+
+# ---------------------------------------------------------------------- build
+def build_immutable(content: SealedContent, *,
+                    sig_bits: int = DEFAULT_SIG_BITS,
+                    plane_budget_bytes: int = DEFAULT_PLANE_BUDGET,
+                    gamma: float = 2.0) -> ImmutableSketch:
+    n_tokens = len(content.fps)
+    n_lists = len(content.lists)
+    # 1. rank lists by reference count, descending (§3.3)
+    order = np.argsort(-content.refcounts, kind="stable")
+    rank_of_list = np.empty(n_lists, dtype=np.int64)
+    rank_of_list[order] = np.arange(n_lists)
+    token_ranks = rank_of_list[content.list_ids] if n_tokens else \
+        np.empty(0, np.int64)
+
+    # 2. MPHF over fingerprints
+    mphf = build_mphf(content.fps, gamma=gamma)
+    if n_tokens:
+        idx, absent = mphf.lookup_np(content.fps)
+        assert not absent.any(), "MPHF must resolve every construction key"
+        assert len(np.unique(idx)) == n_tokens, "MPHF must be injective"
+    else:
+        idx = np.empty(0, np.int64)
+
+    # 3. CSF of ranks in minimal-hash order
+    values_mh = np.zeros(max(n_tokens, 1), dtype=np.int64)
+    values_mh[idx] = token_ranks
+    csf = build_csf(values_mh[:n_tokens] if n_tokens else np.zeros(1, np.int64))
+
+    # 4. signature bits in minimal-hash order
+    sigs_tok = np_seeded_hash32(content.fps, SIG_SEED) \
+        & np.uint32((1 << sig_bits) - 1)
+    sigs_mh = np.zeros(max(n_tokens, 1), dtype=np.uint32)
+    sigs_mh[idx] = sigs_tok
+    w = BitWriter()
+    for s in sigs_mh[:max(n_tokens, 1)]:
+        w.write(int(s), sig_bits)
+    signatures = w.array()
+
+    # 5. BIC-encode lists in rank order
+    lists_by_rank = [content.lists[i] for i in order]
+    bic_bits, bic_offsets, bic_counts = bic.encode_lists(
+        lists_by_rank, content.n_postings)
+
+    # 6. optional device bitmap planes
+    planes = None
+    words = (max(content.n_postings, 1) + 31) // 32
+    if n_lists and n_lists * words * 4 <= plane_budget_bytes:
+        planes = np.zeros((n_lists, words), dtype=np.uint32)
+        for r, lst in enumerate(lists_by_rank):
+            lst = np.asarray(lst, dtype=np.int64)
+            np.bitwise_or.at(planes[r], lst >> 5,
+                             np.uint32(1) << (lst & 31).astype(np.uint32))
+
+    stats = dict(content.stats)
+    stats.update(n_tokens=n_tokens, n_lists=n_lists,
+                 n_postings=content.n_postings,
+                 dedup_ratio=(1.0 - n_lists / n_tokens) if n_tokens else 0.0)
+    return ImmutableSketch(
+        mphf=mphf, csf=csf, signatures=signatures, sig_bits=sig_bits,
+        bic_bits=bic_bits, bic_offsets=bic_offsets, bic_counts=bic_counts,
+        n_postings=content.n_postings, n_tokens=n_tokens, planes=planes,
+        stats=stats)

@@ -1,0 +1,87 @@
+"""Segmentation (§4.3): memory-bounded ingest with spill + merge.
+
+A ``SegmentWriter`` feeds a mutable sketch; when its estimated memory
+exceeds ``memory_limit_bytes`` the sketch is sealed into a *temporary*
+segment (which — like the paper — keeps the full token fingerprints so a
+later merge is possible; MPHFs alone are not mergeable).  ``finish()``
+merges all temporaries plus the live sketch into one immutable sketch via
+the batch builder, equivalent to never having segmented.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .batch_builder import build_sealed
+from .immutable_sketch import ImmutableSketch, build_immutable
+from .mutable_sketch import MutableSketch, SealedContent
+
+
+class SegmentWriter:
+    def __init__(self, *, memory_limit_bytes: int = 32 << 20,
+                 short_list_threshold: int = 16,
+                 sig_bits: int = 8,
+                 plane_budget_bytes: int = 64 << 20):
+        self.memory_limit = memory_limit_bytes
+        self.threshold = short_list_threshold
+        self.sig_bits = sig_bits
+        self.plane_budget = plane_budget_bytes
+        self.sketch = MutableSketch(short_list_threshold=short_list_threshold)
+        self.temporaries: list[SealedContent] = []
+        self._adds_since_check = 0
+        self.n_spills = 0
+
+    def add_line(self, tokens, posting: int) -> None:
+        self.sketch.add_line(tokens, posting)
+        self._adds_since_check += len(tokens)
+        if self._adds_since_check >= 4096:
+            self._adds_since_check = 0
+            if self.sketch.memory_bytes() > self.memory_limit:
+                self.spill()
+
+    def add_fingerprints(self, fps, posting: int) -> None:
+        for fp in fps:
+            self.sketch.add_fingerprint(int(fp), posting)
+        self._adds_since_check += len(fps)
+        if self._adds_since_check >= 4096:
+            self._adds_since_check = 0
+            if self.sketch.memory_bytes() > self.memory_limit:
+                self.spill()
+
+    def spill(self) -> None:
+        """Seal the live sketch into a temporary segment (full fingerprints
+        retained) and start a fresh mutable sketch."""
+        if self.sketch.stats.tokens == 0:
+            return
+        self.temporaries.append(self.sketch.seal())
+        self.sketch = MutableSketch(short_list_threshold=self.threshold)
+        self.n_spills += 1
+
+    def finish(self) -> ImmutableSketch:
+        """Merge temporaries + live sketch into the final immutable sketch."""
+        parts = list(self.temporaries)
+        if self.sketch.stats.tokens:
+            parts.append(self.sketch.seal())
+        merged = merge_sealed(parts)
+        return build_immutable(merged, sig_bits=self.sig_bits,
+                               plane_budget_bytes=self.plane_budget)
+
+
+def merge_sealed(parts: list[SealedContent]) -> SealedContent:
+    """Union of (fingerprint, posting) pairs across temporary segments,
+    re-deduplicated — semantically the paper's merge-into-one-mutable-sketch."""
+    if not parts:
+        return SealedContent(fps=np.empty(0, np.uint32),
+                             list_ids=np.empty(0, np.int64), lists=[],
+                             refcounts=np.empty(0, np.int64), n_postings=0)
+    fp_chunks, post_chunks = [], []
+    stats: dict = {}
+    for part in parts:
+        for tok_i in range(len(part.fps)):
+            lst = part.lists[int(part.list_ids[tok_i])]
+            fp_chunks.append(np.full(len(lst), part.fps[tok_i], np.uint32))
+            post_chunks.append(np.asarray(lst, np.int64))
+        for k, v in part.stats.items():
+            if isinstance(v, (int, float)):
+                stats[k] = stats.get(k, 0) + v
+    return build_sealed(np.concatenate(fp_chunks),
+                        np.concatenate(post_chunks), stats)

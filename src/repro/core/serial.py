@@ -1,0 +1,116 @@
+"""Single flat-file serialization of the immutable sketch (§4.2).
+
+Layout: magic | header_len u32 | header JSON | 64-byte-aligned raw buffers.
+The header holds every array's (dtype, shape, offset); opening a reader
+parses only the header — the paper's "single disk page to open" property.
+``load(mmap=True)`` maps buffers lazily via np.memmap.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .csf import CompressedStaticFunction
+from .immutable_sketch import ImmutableSketch
+from .mphf import MPHF
+
+MAGIC = b"DWRP0001"
+ALIGN = 64
+
+_MPHF_FIELDS = ["words", "level_word_offset", "level_bits", "block_rank",
+                "fallback_fps", "fallback_idx"]
+_CSF_FIELDS = ["bitseq", "lengths", "samples"]
+_TOP_FIELDS = ["signatures", "bic_bits", "bic_offsets", "bic_counts"]
+
+
+def save(sketch: ImmutableSketch, path: str, *, include_planes: bool = False
+         ) -> int:
+    arrays: dict[str, np.ndarray] = {}
+    for f in _MPHF_FIELDS:
+        arrays[f"mphf.{f}"] = np.ascontiguousarray(getattr(sketch.mphf, f))
+    for f in _CSF_FIELDS:
+        arrays[f"csf.{f}"] = np.ascontiguousarray(getattr(sketch.csf, f))
+    for f in _TOP_FIELDS:
+        arrays[f] = np.ascontiguousarray(getattr(sketch, f))
+    if include_planes and sketch.planes is not None:
+        arrays["planes"] = np.ascontiguousarray(sketch.planes)
+
+    meta = dict(sig_bits=sketch.sig_bits, n_postings=sketch.n_postings,
+                n_tokens=sketch.n_tokens,
+                mphf_n_keys=sketch.mphf.n_keys,
+                mphf_n_rank_bits=sketch.mphf.n_rank_bits,
+                csf_n=sketch.csf.n, stats=sketch.stats)
+
+    entries = {}
+    offset = 0
+    blobs = []
+    for name, arr in arrays.items():
+        offset = (offset + ALIGN - 1) // ALIGN * ALIGN
+        entries[name] = dict(dtype=str(arr.dtype), shape=list(arr.shape),
+                             offset=offset, nbytes=arr.nbytes)
+        blobs.append((offset, arr))
+        offset += arr.nbytes
+    header = json.dumps(dict(meta=meta, arrays=entries)).encode()
+
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(len(header)).tobytes())
+        f.write(header)
+        base = f.tell()
+        base_aligned = (base + ALIGN - 1) // ALIGN * ALIGN
+        f.write(b"\0" * (base_aligned - base))
+        pos = 0
+        for off, arr in blobs:
+            f.write(b"\0" * (off - pos))
+            f.write(arr.tobytes())
+            pos = off + arr.nbytes
+    os.replace(tmp, path)  # atomic publish (fault-tolerance contract)
+    return os.path.getsize(path)
+
+
+def load(path: str, *, mmap: bool = True) -> ImmutableSketch:
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
+        header = json.loads(f.read(hlen))
+        base = f.tell()
+    base_aligned = (base + ALIGN - 1) // ALIGN * ALIGN
+    meta, entries = header["meta"], header["arrays"]
+
+    def read_arr(name):
+        if name not in entries:
+            return None
+        e = entries[name]
+        dtype = np.dtype(e["dtype"])
+        count = e["nbytes"] // dtype.itemsize
+        if mmap:
+            arr = np.memmap(path, dtype=dtype, mode="r",
+                            offset=base_aligned + e["offset"], shape=(count,))
+        else:
+            with open(path, "rb") as f:
+                f.seek(base_aligned + e["offset"])
+                arr = np.frombuffer(f.read(e["nbytes"]), dtype=dtype).copy()
+        return arr.reshape(e["shape"])
+
+    mphf = MPHF(words=read_arr("mphf.words"),
+                level_word_offset=read_arr("mphf.level_word_offset"),
+                level_bits=read_arr("mphf.level_bits"),
+                block_rank=read_arr("mphf.block_rank"),
+                fallback_fps=read_arr("mphf.fallback_fps"),
+                fallback_idx=read_arr("mphf.fallback_idx"),
+                n_keys=meta["mphf_n_keys"],
+                n_rank_bits=meta["mphf_n_rank_bits"])
+    csf = CompressedStaticFunction(bitseq=read_arr("csf.bitseq"),
+                                   lengths=read_arr("csf.lengths"),
+                                   samples=read_arr("csf.samples"),
+                                   n=meta["csf_n"])
+    return ImmutableSketch(
+        mphf=mphf, csf=csf, signatures=read_arr("signatures"),
+        sig_bits=meta["sig_bits"], bic_bits=read_arr("bic_bits"),
+        bic_offsets=read_arr("bic_offsets"), bic_counts=read_arr("bic_counts"),
+        n_postings=meta["n_postings"], n_tokens=meta["n_tokens"],
+        planes=read_arr("planes"), stats=meta.get("stats", {}))

@@ -1,0 +1,4 @@
+"""Deterministic training-data pipeline (checkpointable, sketch-filtered)."""
+from .pipeline import LMTokenPipeline, SketchFilteredCorpus
+
+__all__ = ["LMTokenPipeline", "SketchFilteredCorpus"]

@@ -1,0 +1,89 @@
+"""Training-data pipeline: deterministic, checkpointable, sketch-filtered.
+
+Two layers:
+  * ``SketchFilteredCorpus`` — the paper's technique as a first-class
+    data-selection feature: a DynaWarp-indexed corpus yields only the
+    compressed batches whose sketch matches the requested token filters
+    (e.g. train on shards that mention "error" without decompressing the
+    rest).  Filtering cost is the probe, not a scan.
+  * ``LMTokenPipeline`` — seeded, stateless-per-step batch stream: batch
+    t is a pure function of (seed, t), so preemption/restart resumes
+    EXACTLY (the cursor is one integer in the checkpoint manifest) and
+    any worker can produce any step (elastic re-sharding of the stream).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class SketchFilteredCorpus:
+    """Wraps a finished DynaWarp log store as a filtered training corpus."""
+    store: object                      # logstore.store.DynaWarpStore
+    include_terms: tuple = ()          # AND of terms that must appear
+    exclude_terms: tuple = ()          # batches containing these are dropped
+
+    def selected_batches(self) -> np.ndarray:
+        import numpy as np
+        n = self.store.n_batches
+        keep = np.ones(n, bool)
+        for t in self.include_terms:
+            cand = np.zeros(n, bool)
+            cand[self.store.candidates_term(t)] = True
+            keep &= cand
+        for t in self.exclude_terms:
+            cand = np.zeros(n, bool)
+            cand[self.store.candidates_term(t)] = True
+            keep &= ~cand
+        return np.nonzero(keep)[0]
+
+    def lines(self):
+        from ..logstore.compress import decompress_batch
+        for b in self.selected_batches():
+            yield from decompress_batch(self.store.blobs[int(b)])
+
+
+class LMTokenPipeline:
+    """Deterministic (seed, step) -> batch token stream.
+
+    ``text_source`` is any iterable of strings (e.g. a
+    SketchFilteredCorpus); tokens are bytes of the text hashed into the
+    vocab — a stand-in tokenizer with the right statistical shape for
+    the smoke/regression training loops.
+    """
+
+    def __init__(self, text_source, *, vocab: int, batch: int, seq: int,
+                 seed: int = 0, max_lines: int = 100_000):
+        lines = []
+        for i, line in enumerate(text_source):
+            if i >= max_lines:
+                break
+            lines.append(line)
+        corpus = "\n".join(lines).encode() or b"\0"
+        self.tokens = (np.frombuffer(corpus, np.uint8).astype(np.int64)
+                       * 2654435761 % max(vocab, 2)).astype(np.int32)
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (seed, step): the resume/elastic guarantee."""
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        n = len(self.tokens)
+        starts = rng.integers(0, max(n - self.seq - 1, 1), self.batch)
+        tok = np.stack([self.tokens[s:s + self.seq] if s + self.seq <= n
+                        else np.resize(self.tokens, self.seq)
+                        for s in starts])
+        lab = np.stack([self.tokens[s + 1:s + self.seq + 1]
+                        if s + self.seq + 1 <= n
+                        else np.resize(self.tokens, self.seq)
+                        for s in starts])
+        return {"tokens": tok.astype(np.int32),
+                "labels": lab.astype(np.int32),
+                "mask": np.ones((self.batch, self.seq), np.float32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

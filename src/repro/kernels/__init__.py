@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the perf-critical paths.
+
+Paper hot spots (DynaWarp):
+  token_hash      — ingest-side batched token fingerprinting
+  sketch_probe    — immutable-sketch MPHF probe (query fast path)
+  bitset_ops      — posting-plane AND/OR + popcount (Alg. 3 consumer)
+  csc_probe       — CSC baseline probe (fair sketch-vs-sketch comparison)
+Framework hot spots (assigned archs):
+  embedding_bag   — recsys fixed-bag lookup+reduce (scalar prefetch)
+  retrieval_score — 1M-candidate corpus GEMV (two-tower retrieval_cand)
+  flash_decode    — one-token GQA attention vs long KV caches
+                    (decode_32k / long_500k serving path)
+
+Every kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle); tests
+sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from .bitset_ops.ops import bitset_reduce
+from .csc_probe.ops import csc_partition_mask
+from .embedding_bag.ops import embedding_bag_sum
+from .flash_decode.ops import flash_decode
+from .retrieval_score.ops import retrieval_scores, retrieval_topk
+from .sketch_probe.ops import mphf_probe
+from .token_hash.ops import token_fingerprints
+
+__all__ = ["bitset_reduce", "csc_partition_mask", "embedding_bag_sum",
+           "flash_decode", "mphf_probe", "retrieval_scores",
+           "retrieval_topk", "token_fingerprints"]

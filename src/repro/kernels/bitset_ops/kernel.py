@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: posting-bitmap boolean algebra (query intersection).
+
+Query-time search-space reduction (paper Alg. 3 consumer): with posting
+lists materialized as dense bit planes over the S data batches, an
+AND-query over T tokens is a reduction over T u32 planes followed by a
+popcount.  This is pure VPU work: the planes tile into VMEM as
+(T, block_w) u32 blocks, the kernel folds AND (or OR) across the T axis
+and emits both the combined plane and its per-block popcount (the
+candidate-batch count that drives the decompression cost model).
+
+Tiling: grid over the word axis; each step loads a (T, block_w) tile —
+T is small (query tokens, <= 64), block_w = 512 u32 words = 2 KiB rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 512
+
+
+def _bitset_kernel(planes_ref, out_ref, cnt_ref, *, op: str):
+    tile = planes_ref[...]                      # (T, bw) uint32
+    combined = tile[0]
+    for t in range(1, tile.shape[0]):
+        combined = (combined & tile[t]) if op == "and" \
+            else (combined | tile[t])
+    out_ref[...] = combined[None]
+    cnt_ref[0, 0] = jnp.sum(
+        jax.lax.population_count(combined)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_w", "interpret"))
+def bitset_reduce_pallas(planes, *, op: str = "and",
+                         block_w: int = DEFAULT_BLOCK_W,
+                         interpret: bool = True):
+    """planes (T, W) uint32 -> (combined (W,) uint32, popcount ()).
+    W must be a block_w multiple (ops.py pads)."""
+    t, w = planes.shape
+    assert w % block_w == 0
+    grid = (w // block_w,)
+    combined, counts = pl.pallas_call(
+        functools.partial(_bitset_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, block_w), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, block_w), lambda i: (0, i)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((grid[0], 1), jnp.int32)],
+        interpret=interpret,
+    )(planes)
+    return combined[0], jnp.sum(counts)

@@ -1,0 +1,30 @@
+"""Public wrapper: pad, dispatch interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_W, bitset_reduce_pallas
+from .ref import bitset_reduce_ref  # noqa: F401
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bitset_reduce(planes, *, op: str = "and", block_w: int = DEFAULT_BLOCK_W):
+    """(T, W) uint32 posting planes -> (combined plane, set-bit count).
+    AND: candidate batches containing every query token; OR: any token."""
+    t, w = planes.shape
+    block_w = min(block_w, max(128, w))
+    pad = (-w) % block_w
+    if pad:
+        fill = jnp.uint32(0xFFFFFFFF if op == "and" else 0)
+        planes = jnp.pad(planes, ((0, 0), (0, pad)), constant_values=fill)
+    combined, count = bitset_reduce_pallas(planes, op=op, block_w=block_w,
+                                           interpret=_interpret())
+    if pad:
+        # padded words were all-ones under AND; correct both outputs
+        combined = combined[:w]
+        count = count - (pad * 32 if op == "and" else 0)
+    return combined, count

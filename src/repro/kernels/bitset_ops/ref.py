@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for bitset_ops."""
+import jax
+import jax.numpy as jnp
+
+
+def bitset_reduce_ref(planes, *, op: str = "and"):
+    if op == "and":
+        combined = planes[0]
+        for t in range(1, planes.shape[0]):
+            combined = combined & planes[t]
+    else:
+        combined = planes[0]
+        for t in range(1, planes.shape[0]):
+            combined = combined | planes[t]
+    count = jnp.sum(jax.lax.population_count(combined)).astype(jnp.int32)
+    return combined, count

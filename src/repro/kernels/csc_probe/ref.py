@@ -1,0 +1,5 @@
+"""Oracle: the CSC sketch's own jnp partition mask."""
+
+
+def csc_probe_ref(sketch, fps):
+    return sketch.partition_mask_jnp(fps)

@@ -1,0 +1,10 @@
+"""Oracles: fixed-bag (take+sum) and ragged (segment_sum) EmbeddingBag."""
+from ...models.recsys import embedding_bag, embedding_bag_ragged
+
+
+def embedding_bag_ref(table, idx):
+    return embedding_bag(table, idx, mode="sum")
+
+
+def embedding_bag_ragged_ref(table, indices, segment_ids, n_bags):
+    return embedding_bag_ragged(table, indices, segment_ids, n_bags)

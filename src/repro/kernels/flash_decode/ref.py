@@ -1,0 +1,8 @@
+"""Oracle: the model's own decode attention (no window/softcap)."""
+from ...models.attention import decode_attention
+
+
+def flash_decode_ref(q, k_cache, v_cache, cache_len):
+    """q (B, Hq, D) -> (B, Hq, D)."""
+    out = decode_attention(q[:, None], k_cache, v_cache, cache_len)
+    return out[:, 0]

@@ -1,0 +1,6 @@
+"""Oracle for retrieval_score."""
+import jax.numpy as jnp
+
+
+def retrieval_score_ref(corpus, query):
+    return (corpus @ query[0]).astype(jnp.float32)

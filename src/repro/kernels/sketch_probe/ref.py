@@ -1,0 +1,6 @@
+"""Oracle: the MPHF's own jnp lookup (core/mphf.py)."""
+
+
+def sketch_probe_ref(mphf, fps):
+    idx, absent = mphf.lookup_jnp(fps)
+    return idx, absent

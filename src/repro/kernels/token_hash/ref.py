@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the token_hash kernel."""
+from ...core.hashing import jnp_token_fingerprints
+
+
+def token_hash_ref(tokens_u8, lengths):
+    return jnp_token_fingerprints(tokens_u8, lengths)

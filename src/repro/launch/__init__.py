@@ -1,0 +1,2 @@
+"""Launcher substrate: production mesh, dry-run, training/serving loops,
+checkpointing, elastic fault tolerance."""

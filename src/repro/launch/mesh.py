@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+IMPORTANT: importing this module never touches jax device state — meshes
+are built lazily inside functions so smoke tests see 1 CPU device while
+the dry-run (which sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import) sees the full placeholder pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names — lets every
+    sharding rule run unchanged in CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+HW = dict(
+    # TPU v5e-like target constants (per chip)
+    peak_flops_bf16=197e12,       # FLOP/s
+    hbm_bw=819e9,                 # B/s
+    ici_bw=50e9,                  # B/s per link
+    hbm_bytes=16 * 2**30,
+)

@@ -1,0 +1,230 @@
+"""Partition-spec rules per architecture family.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model')
+multi-pod.  Conventions (see DESIGN.md §4):
+
+  LM    : DP/FSDP over pod x data; TP over model on the fused head dim and
+          d_ff; EP over model for MoE expert blocks; vocab over model for
+          embed/unembed; KV caches shard batch over data and sequence over
+          model (decode_32k) or sequence over data x model (long_500k).
+  GNN   : edge arrays over ALL axes (edge parallelism); nodes/params
+          replicated; segment_sum partials combined by SPMD all-reduce.
+  RecSys: embedding-table rows over model (huge_embedding axis); batch
+          over pod x data; retrieval candidates over data x model.
+
+Rules are path-regex based so optimizer-state trees (which mirror param
+trees) inherit specs automatically.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def edge_axes(mesh):
+    return tuple(mesh.axis_names)  # all axes combined
+
+
+def _dim(mesh, name):
+    return mesh.shape[name]
+
+
+def _divisible(n, mesh, axes) -> bool:
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= _dim(mesh, a)
+    return n % total == 0
+
+
+# --------------------------------------------------------------------- LM
+def lm_param_spec(cfg, fsdp: bool, mesh):
+    """Returns fn(path_str, shape) -> PartitionSpec."""
+    m = _dim(mesh, "model")
+    fs = "data" if fsdp else None
+
+    def spec(path: str, shape) -> P:
+        nd = len(shape)
+        if "embed" in path or "unembed" in path:
+            # (V, D) / (D, V): vocab over model
+            if path.endswith("embed") and shape[0] == cfg.vocab:
+                return P("model", *([None] * (nd - 1)))
+            return P(*([None] * (nd - 1)), "model")
+        if re.search(r"\bmoe/(w_gate|w_up)$", path):
+            return P(None, "model", fs, None)      # (L, E, D, F)
+        if re.search(r"\bmoe/w_down$", path):
+            return P(None, "model", None, fs)      # (L, E, F, D)
+        if re.search(r"\bmoe/router$", path):
+            return P(None, fs, None)               # (L, D, E)
+        if re.search(r"(mlp|dense)/(w_gate|w_up)$", path):
+            return P(None, fs, "model") if shape[-1] % m == 0 \
+                else P(None, fs, None)             # (L, D, F)
+        if re.search(r"(mlp|dense)/w_down$", path):
+            return P(None, "model", fs) if shape[-2] % m == 0 \
+                else P(None, None, fs)             # (L, F, D)
+        # Attention TP sharding is head-granular, NOT fused-dim-granular:
+        # sharding (H*Dh) when H % model != 0 makes GSPMD factorize the
+        # split across the d_head CONTRACTION dim, which materializes
+        # partial attention scores and all-reduces them — measured 56 GiB
+        # per layer on arctic prefill_32k (see EXPERIMENTS.md §Perf).
+        # Rule: shard q-side iff n_heads % model == 0, kv-side iff
+        # n_kv_heads % model == 0; otherwise REPLICATE over model
+        # (Megatron GQA convention: each TP rank keeps full K/V).
+        # Non-divisible head counts (arctic: 56 q-heads, 8 kv-heads vs
+        # model=16) fall back to ROW-PARALLEL projections: the input
+        # d_model dim shards over 'model' (one psum per projection), the
+        # attention core runs data-parallel.  Fully replicating the
+        # projections instead cost 2.6x HLO FLOPs on arctic train
+        # (EXPERIMENTS.md §Perf iteration 6).
+        q_ok = getattr(cfg, "n_heads", 0) % m == 0
+        kv_ok = getattr(cfg, "n_kv_heads", 0) % m == 0
+        if re.search(r"w[q]$", path):
+            return P(None, fs, "model") if q_ok else P(None, "model", fs)
+        if re.search(r"w[kv]$", path):
+            return P(None, fs, "model") if kv_ok else P(None, "model", fs)
+        if path.endswith("wo"):
+            return P(None, "model", fs) if q_ok \
+                else P(None, fs, "model")          # (L, H*Dh, D)
+        if "ln" in path:
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    return spec
+
+
+def lm_batch_spec(mesh, shape_spec, cfg):
+    """Rule (path, shape) -> PartitionSpec for LM step inputs."""
+    bd = batch_axes(mesh)
+    seq_policy = shape_spec.decode_policy == "seq"
+
+    def rule(path: str, shape) -> P:
+        if "cache" in path:                        # (L, B, S, Hkv, Dh)
+            if seq_policy:
+                return P(None, None, tuple(mesh.axis_names), None, None)
+            return P(None, bd, "model", None, None)
+        if path.endswith("tokens") and len(shape) == 1:   # decode tokens
+            return P(None) if seq_policy else P(bd)
+        return P(bd, *([None] * (len(shape) - 1)))
+
+    return rule
+
+
+def lm_out_spec(mesh, shape_spec, cfg):
+    """Output specs: prefill -> (cache, logits); decode ->
+    (cache, next_tokens, logits)."""
+    bd = batch_axes(mesh)
+    seq_policy = shape_spec.decode_policy == "seq"
+    if shape_spec.kind == "prefill":
+        cache = P(None, bd, "model", None, None)   # (L, B, S, Hkv, Dh)
+        return ({"k": cache, "v": cache}, P(bd, None))
+    if shape_spec.kind == "decode":
+        if seq_policy:
+            cache = P(None, None, tuple(mesh.axis_names), None, None)
+            return ({"k": cache, "v": cache}, P(None), P(None, "model"))
+        cache = P(None, bd, "model", None, None)
+        return ({"k": cache, "v": cache}, P(bd), P(bd, "model"))
+    raise ValueError(shape_spec.kind)
+
+
+# -------------------------------------------------------------------- GNN
+def gnn_batch_spec(mesh, shape_spec, cfg):
+    e = edge_axes(mesh)
+
+    def rule(path: str, shape) -> P:
+        if any(k in path for k in ("edges", "senders", "receivers",
+                                   "edge_mask")):
+            return P(e, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))           # nodes/targets replicated
+
+    return rule
+
+
+def gnn_param_spec(cfg, fsdp, mesh):
+    def spec(path, shape):
+        return P(*([None] * len(shape)))
+    return spec
+
+
+# ----------------------------------------------------------------- RecSys
+# Embedding tables below this size are REPLICATED per chip: sharding a
+# 200 MB table over 'model' turns every lookup into a dense f32
+# all-reduce of the gathered activations (measured 6.6 GiB/device on
+# sasrec serve_bulk — EXPERIMENTS.md §Perf iteration 5).  The paper's
+# core lesson transfers: move the small structure to the data, never the
+# data to the structure.
+REPLICATE_TABLE_BYTES = 512 << 20
+
+
+def recsys_param_spec(cfg, fsdp, mesh):
+    m = _dim(mesh, "model")
+
+    def spec(path, shape):
+        nd = len(shape)
+        n_bytes = 4
+        for s in shape:
+            n_bytes *= s
+        huge = nd >= 1 and shape[0] >= 10000 \
+            and n_bytes > REPLICATE_TABLE_BYTES
+        if ("table" in path or "item_emb" in path or "wide" in path
+                or "corpus" in path) and huge:
+            return P("model", *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return spec
+
+
+def recsys_batch_spec(mesh, shape_spec, cfg):
+    bd = batch_axes(mesh)
+    cand_ax = tuple(mesh.axis_names)
+    kind = shape_spec.kind
+
+    def rule(path: str, shape) -> P:
+        if kind == "retrieval":
+            if path.endswith("cand"):
+                return P(cand_ax, *([None] * (len(shape) - 1)))
+            return P(*([None] * len(shape)))     # single query replicated
+        return P(bd, *([None] * (len(shape) - 1)))
+
+    return rule
+
+
+# ------------------------------------------------------------- tree utils
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_specs(tree, rule):
+    """Map a (path, shape) rule over a pytree of ShapeDtypeStruct/arrays."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rule(path_str(path), leaf.shape), tree)
+
+
+def tree_shardings(tree, rule, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh,
+                                         rule(path_str(path), leaf.shape)),
+        tree)
+
+
+def specs_to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+PARAM_RULES = dict(lm=lm_param_spec, gnn=gnn_param_spec,
+                   recsys=recsys_param_spec)

@@ -1,0 +1,337 @@
+"""Step factories: build (fn, abstract args, shardings) bundles for every
+(arch x shape) cell — consumed by the dry-run, the trainers and the tests.
+
+LM training implements the large-scale schedule:
+  * microbatched gradient accumulation (lax.scan over the reshaped batch),
+  * full remat inside the layer scan,
+  * sequence-chunked cross-entropy,
+  * AdamW (f32 moments) or Adafactor (factored + bf16 moment, arctic),
+  * donated params/opt-state buffers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchSpec, ShapeSpec
+from ..models import gnn as gnn_mod
+from ..models import recsys as rs
+from ..models import transformer as tf_mod
+from ..optim.adafactor import (AdafactorConfig, AdafactorState,
+                               adafactor_update, init_adafactor)
+from ..optim.adam import AdamConfig, AdamState, adam_update, init_adam
+from . import shardings as sh
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple                 # abstract arg trees (ShapeDtypeStruct)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_notes: str = ""
+
+
+def _p(spec_list):
+    return P(*spec_list)
+
+
+def _drop_axis(spec: P, axis_from_end: int) -> P:
+    parts = list(spec)
+    if len(parts) == 0:
+        return spec
+    idx = len(parts) - axis_from_end
+    if 0 <= idx < len(parts):
+        parts.pop(idx)
+    return P(*parts)
+
+
+def opt_specs_for(optimizer: str, param_specs, params_abs):
+    is_p = lambda x: isinstance(x, P)
+    if optimizer == "adamw":
+        return AdamState(step=P(), mu=param_specs, nu=param_specs)
+    # adafactor: vr drops last axis (ndim>=2), vc drops second-to-last
+    vr = jax.tree.map(
+        lambda s, a: _drop_axis(s, 1) if len(a.shape) >= 2 else s,
+        param_specs, params_abs, is_leaf=is_p)
+    vc = jax.tree.map(
+        lambda s, a: _drop_axis(s, 2) if len(a.shape) >= 2 else P(None),
+        param_specs, params_abs, is_leaf=is_p)
+    return AdafactorState(step=P(), mu=param_specs, vr=vr, vc=vc)
+
+
+def make_optimizer(spec: ArchSpec):
+    if spec.optimizer == "adafactor":
+        cfg = AdafactorConfig()
+        return cfg, init_adafactor, adafactor_update
+    cfg = AdamConfig()
+    return cfg, (lambda c, p: init_adam(p)) if False else init_adam, \
+        adam_update
+
+
+def _init_opt(spec: ArchSpec, ocfg, params):
+    if spec.optimizer == "adafactor":
+        return init_adafactor(ocfg, params)
+    return init_adam(params)
+
+
+def _opt_update(spec: ArchSpec, ocfg, params, grads, opt):
+    if spec.optimizer == "adafactor":
+        return adafactor_update(ocfg, params, grads, opt)
+    return adam_update(ocfg, params, grads, opt)
+
+
+# ------------------------------------------------------------ loss dispatch
+def family_loss(spec: ArchSpec):
+    cfg = spec.config
+    if spec.family == "lm":
+        return lambda p, b: tf_mod.lm_loss(cfg, p, b)[0]
+    if spec.family == "gnn":
+        return lambda p, b: gnn_mod.gnn_loss(cfg, p, b)[0]
+    name = type(cfg).__name__
+    fns = {"XDeepFMConfig": rs.xdeepfm_loss, "SASRecConfig": rs.sasrec_loss,
+           "MINDConfig": rs.mind_loss, "TwoTowerConfig": rs.twotower_loss}
+    return lambda p, b: fns[name](cfg, p, b)[0]
+
+
+def family_init(spec: ArchSpec, smoke: bool = False, cfg_override=None):
+    cfg = cfg_override or (spec.smoke_config if smoke else spec.config)
+    if spec.family == "lm":
+        return lambda rng: tf_mod.init_params(cfg, rng)
+    if spec.family == "gnn":
+        return lambda rng: gnn_mod.init_params(cfg, rng)
+    name = type(cfg).__name__
+    fns = {"XDeepFMConfig": rs.xdeepfm_init, "SASRecConfig": rs.sasrec_init,
+           "MINDConfig": rs.mind_init, "TwoTowerConfig": rs.twotower_init}
+    return lambda rng: fns[name](cfg, rng)
+
+
+def serve_fn(spec: ArchSpec, shape: ShapeSpec):
+    cfg = spec.config
+    name = type(cfg).__name__
+    if shape.kind == "serve":
+        fns = {"XDeepFMConfig": lambda p, b: rs.xdeepfm_logits(cfg, p,
+                                                               b["idx"]),
+               "SASRecConfig": partial(rs.sasrec_serve, cfg),
+               "MINDConfig": partial(rs.mind_serve, cfg),
+               "TwoTowerConfig": partial(rs.twotower_serve, cfg)}
+    else:
+        fns = {"XDeepFMConfig": partial(rs.xdeepfm_retrieval, cfg),
+               "SASRecConfig": partial(rs.sasrec_retrieval, cfg),
+               "MINDConfig": partial(rs.mind_retrieval, cfg),
+               "TwoTowerConfig": partial(rs.twotower_retrieval, cfg)}
+    return fns[name]
+
+
+# -------------------------------------------------------------- LM builder
+def _gnn_cfg_for_shape(cfg, shape: ShapeSpec):
+    return replace(cfg, d_node_in=shape.dims["d_feat"])
+
+
+def make_train_step(spec: ArchSpec, shape: ShapeSpec,
+                    batch_axes: tuple = ("data",)):
+    """Returns train_step(params, opt_state, batch) -> (params', opt',
+    metrics).  ``batch_axes``: mesh axes the global batch is sharded over —
+    re-asserted after the microbatch reshape (otherwise SPMD is free to
+    shard the n_micro dim and replicate the batch, a 16x memory blowup we
+    hit on arctic)."""
+    cfg = spec.config
+    if spec.family == "gnn":
+        cfg = _gnn_cfg_for_shape(cfg, shape)
+        loss_fn = lambda p, b: gnn_mod.gnn_loss(cfg, p, b)[0]
+    elif spec.family == "lm":
+        loss_fn = lambda p, b: tf_mod.lm_loss(cfg, p, b)[0]
+    else:
+        loss_fn = family_loss(spec)
+    ocfg, _, _ = make_optimizer(spec)
+    n_micro = shape.n_microbatches
+    accum_dt = jnp.dtype(spec.grad_accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def reshard(x):
+                mb = x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+                spec_ = P(None, batch_axes,
+                          *([None] * (mb.ndim - 2)))
+                return jax.lax.with_sharding_constraint(mb, spec_)
+
+            micro = jax.tree.map(reshard, batch)
+
+            def mstep(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, l
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dt), params)
+            grads, losses = jax.lax.scan(mstep, acc0, micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+        params, opt_state, om = _opt_update(spec, ocfg, params, grads,
+                                            opt_state)
+        return params, opt_state, dict(loss=loss, **om)
+
+    return train_step
+
+
+def make_serve_step(spec: ArchSpec, shape: ShapeSpec):
+    cfg = spec.config
+    if spec.family == "lm":
+        if shape.kind == "prefill":
+            return lambda params, batch: tf_mod.prefill(cfg, params,
+                                                        batch["tokens"])
+        if shape.kind == "decode":
+            cache_len = shape.dims["seq"] - 1
+
+            def decode(params, batch):
+                return tf_mod.decode_step(cfg, params, batch["cache"],
+                                          batch["tokens"], cache_len)
+            return decode
+        raise ValueError(shape.kind)
+    fn = serve_fn(spec, shape)
+    return lambda params, batch: fn(params, batch)
+
+
+# ------------------------------------------------------------ full bundles
+def abstract_state(spec: ArchSpec, with_opt: bool, cfg_override=None):
+    """eval_shape the param (and optimizer) trees — zero allocation."""
+    init = family_init(spec, cfg_override=cfg_override)
+    params = jax.eval_shape(lambda: init(jax.random.PRNGKey(0)))
+    if not with_opt:
+        return params, None
+    ocfg, _, _ = make_optimizer(spec)
+    opt = jax.eval_shape(lambda: _init_opt(spec, ocfg,
+                                           jax.tree.map(jnp.zeros_like,
+                                                        params)))
+    return params, opt
+
+
+def build_bundle(spec: ArchSpec, shape_name: str, mesh) -> StepBundle:
+    shape = spec.shapes[shape_name]
+    cfg = spec.config
+    if spec.family == "gnn":
+        cfg_eff = _gnn_cfg_for_shape(cfg, shape)
+    elif spec.family == "lm":
+        bd = sh.batch_axes(mesh)
+        # pin activation layout; bind the shard_map expert-parallel MoE
+        # dispatch to this mesh (no-ops for dense archs)
+        import os
+        act_2d = os.environ.get("REPRO_ACT_SHARDING", "2d") == "2d"
+        cfg_eff = replace(
+            cfg, act_batch_axes=bd if shape.kind != "decode" else None,
+            act_model_axis="model" if act_2d
+            and cfg.d_model % mesh.shape["model"] == 0 else None,
+            # It. 7: seq-parallel attention core when q heads don't
+            # divide the TP axis (otherwise the core replicates)
+            attn_seq_parallel=(cfg.n_heads % mesh.shape["model"] != 0
+                               and shape.kind != "decode"),
+            **(dict(moe_batch_axes=bd, moe_expert_axis="model",
+                    moe_fsdp_axis="data" if spec.fsdp else None,
+                    moe_expert_parallel=mesh.shape["model"])
+               if cfg.is_moe else {}))
+    else:
+        cfg_eff = cfg
+    spec = replace(spec, config=cfg_eff)
+    if shape.kind == "train" and shape.n_microbatches > 1:
+        # keep >=1 example per batch shard per microbatch
+        shards = 1
+        for a in sh.batch_axes(mesh):
+            shards *= mesh.shape[a]
+        n_eff = max(1, min(shape.n_microbatches,
+                           shape.dims["batch"] // shards))
+        while shape.dims["batch"] % (n_eff * shards) and n_eff > 1:
+            n_eff -= 1
+        shape = replace(shape, n_microbatches=n_eff)
+    inputs = spec.inputs(cfg_eff, shape)
+
+    param_rule = sh.PARAM_RULES[spec.family](cfg_eff, spec.fsdp, mesh)
+    batch_rule = {"lm": sh.lm_batch_spec, "gnn": sh.gnn_batch_spec,
+                  "recsys": sh.recsys_batch_spec}[spec.family](
+        mesh, shape, cfg_eff)
+
+    batch_specs = sh.tree_specs(inputs, batch_rule)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        params_abs, opt_abs = abstract_state(spec, with_opt=True,
+                                             cfg_override=cfg_eff)
+        param_specs = sh.tree_specs(params_abs, param_rule)
+        opt_specs = opt_specs_for(spec.optimizer, param_specs, params_abs)
+        fn = make_train_step(spec, shape, batch_axes=sh.batch_axes(mesh))
+        return StepBundle(
+            name=f"{spec.id}:{shape_name}:train",
+            fn=fn,
+            args=(params_abs, opt_abs, inputs),
+            in_shardings=(ns(param_specs), ns(opt_specs), ns(batch_specs)),
+            out_shardings=(ns(param_specs), ns(opt_specs), None),
+            donate_argnums=(0, 1))
+
+    params_abs, _ = abstract_state(spec, with_opt=False,
+                                   cfg_override=cfg_eff)
+    param_specs = sh.tree_specs(params_abs, param_rule)
+    fn = make_serve_step(spec, shape)
+    if spec.family == "lm":
+        out = sh.lm_out_spec(mesh, shape, cfg_eff)
+        out_sh = ns(out)
+        donate = (1,) if shape.kind == "decode" else ()
+    else:
+        out_sh = None
+        donate = ()
+    return StepBundle(
+        name=f"{spec.id}:{shape_name}:{shape.kind}",
+        fn=fn,
+        args=(params_abs, inputs),
+        in_shardings=(ns(param_specs), ns(batch_specs)),
+        out_shardings=out_sh,
+        donate_argnums=donate)
+
+
+def analysis_variant(spec: ArchSpec, shape_name: str, n_layers: int,
+                     mesh=None):
+    """A reduced-depth, UNROLLED variant of the cell for cost extraction.
+
+    XLA's cost model counts while-loop bodies once, so the dry-run lowers
+    two unrolled variants (different n_layers), fits cost = a + b*L and
+    extrapolates to the real depth.  Attention/CE chunk scans are widened
+    to a single block so their flops are fully visible; LM training drops
+    to one microbatch (costs scale back up by n_microbatches; the
+    optimizer-step constant is overcounted by the same factor — negligible
+    vs the matmul terms, noted in EXPERIMENTS.md)."""
+    shape = spec.shapes[shape_name]
+    cfg = spec.config
+    if spec.family == "lm":
+        seq = shape.dims["seq"]
+        cfg2 = replace(cfg, n_layers=n_layers, scan_layers=False,
+                       q_chunk=seq, kv_chunk=seq, ce_chunk=seq)
+        dims = dict(shape.dims)
+        scale = 1
+        if shape.kind == "train" and shape.n_microbatches > 1:
+            shards = 1
+            if mesh is not None:
+                for a in sh.batch_axes(mesh):
+                    shards *= mesh.shape[a]
+            scale = shape.n_microbatches
+            # analysis batch must still shard over the batch axes
+            while scale > 1 and (dims["batch"] // scale) % shards:
+                scale //= 2
+            dims["batch"] = dims["batch"] // scale
+        shape2 = replace(shape, dims=dims, n_microbatches=1)
+    elif spec.family == "gnn":
+        cfg2 = replace(cfg, n_layers=n_layers, scan_layers=False)
+        shape2, scale = shape, 1
+    else:
+        return None
+    spec2 = replace(spec, config=cfg2, shapes={**spec.shapes,
+                                               shape_name: shape2})
+    return spec2, shape2, scale

@@ -1,0 +1,12 @@
+"""Log storage substrate: batched zstd storage, the common store
+interface, all baseline stores, and the synthetic dataset generator."""
+from .datasets import (LogDataset, extracted_term_queries, generate_dataset,
+                       id_queries, ip_queries, present_id_queries)
+from .store import (ALL_STORES, BloomStore, CscStore, DynaWarpStore,
+                    LuceneStore, ScanStore)
+
+__all__ = [
+    "ALL_STORES", "BloomStore", "CscStore", "DynaWarpStore", "LogDataset",
+    "LuceneStore", "ScanStore", "extracted_term_queries", "generate_dataset",
+    "id_queries", "ip_queries", "present_id_queries",
+]

@@ -1,0 +1,15 @@
+"""Batch compression for the log store (§5: zStandard, batched records)."""
+from __future__ import annotations
+
+import zstandard as zstd
+
+_CCTX = zstd.ZstdCompressor(level=3)
+_DCTX = zstd.ZstdDecompressor()
+
+
+def compress_batch(lines: list[str]) -> bytes:
+    return _CCTX.compress("\n".join(lines).encode("utf-8"))
+
+
+def decompress_batch(blob: bytes) -> list[str]:
+    return _DCTX.decompress(blob).decode("utf-8").split("\n")

@@ -1,0 +1,372 @@
+"""Common log-store interface + the five implementations benchmarked in §5.
+
+Every store ingests lines one batch at a time, becomes immutable via
+``finish()``, and answers term/contains queries by (1) asking its index
+for candidate batches and (2) decompressing + post-filtering those batches
+(the paper's protocol: false positives cost real decompression work).
+
+Stores:
+  * DynaWarpStore — the paper's sketch (rules 1-8 tokens).
+  * CscStore      — CSC sketch baseline (rules 1-8 tokens).
+  * LuceneStore   — inverted index baseline (rules 1-5 tokens, lexicon scan
+                    for contains).
+  * BloomStore    — per-batch Bloom filters.
+  * ScanStore     — no index; decompress-everything baseline.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..baselines.bloom import BloomPerBatch
+from ..baselines.csc import CSCSketch
+from ..baselines.inverted import InvertedIndex
+from ..core.batch_builder import build_sealed
+from ..core.hashing import token_fingerprint
+from ..core.immutable_sketch import build_immutable
+from ..core.query import query_and
+from ..core.segment import SegmentWriter
+from ..core.tokenizer import (contains_query_tokens, term_query_tokens,
+                              tokenize_line)
+from .compress import compress_batch, decompress_batch
+
+
+@dataclass
+class QueryResult:
+    matches: list[int]              # global line indices
+    candidate_batches: np.ndarray   # batches the index said to read
+    true_batches: int               # candidates that actually matched
+    batches_total: int
+
+    @property
+    def false_positive_batches(self) -> int:
+        return len(self.candidate_batches) - self.true_batches
+
+    @property
+    def error_rate(self) -> float:
+        """Paper §5.2: found-but-irrelevant batches / total batches."""
+        if self.batches_total == 0:
+            return 0.0
+        return self.false_positive_batches / self.batches_total
+
+
+@dataclass
+class IngestStats:
+    ingest_s: float = 0.0        # tokenize + index + buffer
+    sketch_finish_s: float = 0.0
+    data_finish_s: float = 0.0
+    data_bytes: int = 0
+    index_bytes: int = 0
+    raw_bytes: int = 0
+    n_tokens_indexed: int = 0
+
+
+class LogStoreBase:
+    """Batched storage common to all stores."""
+    name = "base"
+    uses_ngrams = True
+
+    def __init__(self, *, batch_lines: int = 512):
+        self.batch_lines = batch_lines
+        self.blobs: list[bytes] = []
+        self.batch_start: list[int] = [0]
+        self._buf: list[str] = []
+        self._n_lines = 0
+        self.stats = IngestStats()
+        self._finished = False
+
+    # ------------------------------------------------------------------ ingest
+    def ingest(self, lines) -> None:
+        t0 = time.perf_counter()
+        for line in lines:
+            self._buf.append(line)
+            self.stats.raw_bytes += len(line) + 1
+            self._index_line(line, len(self.blobs))
+            self._n_lines += 1
+            if len(self._buf) >= self.batch_lines:
+                self._flush_batch()
+        self.stats.ingest_s += time.perf_counter() - t0
+
+    def _flush_batch(self) -> None:
+        blob = compress_batch(self._buf)
+        self.blobs.append(blob)
+        self.stats.data_bytes += len(blob)
+        self.batch_start.append(self._n_lines)
+        self._buf = []
+
+    def finish(self) -> None:
+        t0 = time.perf_counter()
+        if self._buf:
+            self._flush_batch()
+        self.stats.data_finish_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        self._seal_index()
+        self.stats.sketch_finish_s = time.perf_counter() - t0
+        self.stats.index_bytes = self.index_bytes()
+        self._finished = True
+
+    # hooks ---------------------------------------------------------------
+    def _index_line(self, line: str, batch_id: int) -> None:
+        pass
+
+    def _seal_index(self) -> None:
+        pass
+
+    def index_bytes(self) -> int:
+        return 0
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        return np.arange(len(self.blobs), dtype=np.int64)
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        return np.arange(len(self.blobs), dtype=np.int64)
+
+    # ------------------------------------------------------------------ query
+    def _post_filter(self, candidates: np.ndarray, term: str,
+                     mode: str) -> QueryResult:
+        term_l = term.lower()
+        matches: list[int] = []
+        true_batches = 0
+        for b in candidates:
+            lines = decompress_batch(self.blobs[int(b)])
+            base = self.batch_start[int(b)]
+            hit = False
+            for i, line in enumerate(lines):
+                low = line.lower()
+                if term_l not in low:
+                    continue
+                if mode == "contains" or self._term_in_line(term_l, low):
+                    matches.append(base + i)
+                    hit = True
+            true_batches += hit
+        return QueryResult(matches=matches,
+                           candidate_batches=np.asarray(candidates),
+                           true_batches=true_batches,
+                           batches_total=len(self.blobs))
+
+    @staticmethod
+    def _term_in_line(term_l: str, line_lower: str) -> bool:
+        """Exact term membership under tokenization rules 1-5."""
+        return term_l.encode() in tokenize_line(line_lower, ngrams=False)
+
+    def query_term(self, term: str) -> QueryResult:
+        return self._post_filter(self.candidates_term(term), term, "term")
+
+    def query_contains(self, term: str) -> QueryResult:
+        return self._post_filter(self.candidates_contains(term), term,
+                                 "contains")
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.blobs)
+
+
+class ScanStore(LogStoreBase):
+    """Brute-force decompress-and-scan baseline."""
+    name = "scan"
+    uses_ngrams = False
+
+
+class DynaWarpStore(LogStoreBase):
+    """The paper's sketch.  ``mode='batch'`` uses the TPU-idiomatic batch
+    builder; ``mode='online'`` uses the faithful mutable sketch with
+    memory-bounded segmentation (§4.3)."""
+    name = "dynawarp"
+
+    def __init__(self, *, batch_lines: int = 512, mode: str = "batch",
+                 sig_bits: int = 8, memory_limit_bytes: int = 32 << 20,
+                 ngrams: bool = True):
+        super().__init__(batch_lines=batch_lines)
+        self.mode = mode
+        self.sig_bits = sig_bits
+        self.uses_ngrams = ngrams
+        self.sketch = None
+        if mode == "online":
+            self._writer = SegmentWriter(memory_limit_bytes=memory_limit_bytes,
+                                         sig_bits=sig_bits)
+        else:
+            self._fp_chunks: list[np.ndarray] = []
+            self._post_chunks: list[np.ndarray] = []
+
+    def _index_line(self, line: str, batch_id: int) -> None:
+        tokens = tokenize_line(line, ngrams=self.uses_ngrams)
+        self.stats.n_tokens_indexed += len(tokens)
+        fps = np.fromiter((token_fingerprint(t) for t in tokens),
+                          dtype=np.uint32, count=len(tokens))
+        if self.mode == "online":
+            self._writer.add_fingerprints(fps, batch_id)
+        else:
+            self._fp_chunks.append(fps)
+            self._post_chunks.append(np.full(fps.shape, batch_id, np.int64))
+
+    def _seal_index(self) -> None:
+        if self.mode == "online":
+            self.sketch = self._writer.finish()
+        else:
+            sealed = build_sealed(
+                np.concatenate(self._fp_chunks) if self._fp_chunks
+                else np.empty(0, np.uint32),
+                np.concatenate(self._post_chunks) if self._post_chunks
+                else np.empty(0, np.int64))
+            self.sketch = build_immutable(sealed, sig_bits=self.sig_bits)
+            self._fp_chunks = self._post_chunks = None
+
+    def index_bytes(self) -> int:
+        return self.sketch.size_bytes() if self.sketch else 0
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        return query_and(self.sketch, term_query_tokens(term))
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        tokens = contains_query_tokens(term)
+        if not tokens:
+            return np.arange(len(self.blobs), dtype=np.int64)  # full scan
+        return query_and(self.sketch, tokens)
+
+
+class CscStore(LogStoreBase):
+    """CSC sketch baseline; sized at finish() to ``m_bits`` (the benchmark
+    passes the next power of two above the DynaWarp sketch size, §5.1.3)."""
+    name = "csc"
+
+    def __init__(self, *, batch_lines: int = 512, m_bits: int | None = None,
+                 k: int = 4, p: int = 64, j: int = 1):
+        super().__init__(batch_lines=batch_lines)
+        self.m_bits = m_bits
+        self.k, self.p, self.j = k, p, j
+        self._fp_chunks: list[np.ndarray] = []
+        self._post_chunks: list[np.ndarray] = []
+        self.sketch: CSCSketch | None = None
+
+    def _index_line(self, line: str, batch_id: int) -> None:
+        tokens = tokenize_line(line, ngrams=True)
+        self.stats.n_tokens_indexed += len(tokens)
+        fps = np.fromiter((token_fingerprint(t) for t in tokens),
+                          dtype=np.uint32, count=len(tokens))
+        self._fp_chunks.append(fps)
+        self._post_chunks.append(np.full(fps.shape, batch_id, np.int64))
+
+    def _seal_index(self) -> None:
+        m_bits = self.m_bits or max(64, 16 * self._n_lines)
+        self.sketch = CSCSketch.build(m_bits=m_bits, k=self.k, p=self.p,
+                                      j=self.j, n_sets=len(self.blobs))
+        if self._fp_chunks:
+            self.sketch.insert_batch(np.concatenate(self._fp_chunks),
+                                     np.concatenate(self._post_chunks))
+        self._fp_chunks = self._post_chunks = None
+
+    def index_bytes(self) -> int:
+        return self.sketch.size_bits() // 8 if self.sketch else 0
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        # §5.2: CSC additionally intersects the n-grams of the query term
+        # to reduce its error rate.
+        tokens = (term_query_tokens(term) + contains_query_tokens(term))
+        fps = np.asarray([token_fingerprint(t) for t in tokens], np.uint32)
+        return self.sketch.query_all_tokens(fps)
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        tokens = contains_query_tokens(term)
+        if not tokens:
+            return np.arange(len(self.blobs), dtype=np.int64)
+        fps = np.asarray([token_fingerprint(t) for t in tokens], np.uint32)
+        return self.sketch.query_all_tokens(fps)
+
+
+class LuceneStore(LogStoreBase):
+    """Inverted-index baseline: full tokens (rules 1-5 only), exact
+    postings, contains via lexicon scan."""
+    name = "lucene"
+    uses_ngrams = False
+
+    def __init__(self, *, batch_lines: int = 512):
+        super().__init__(batch_lines=batch_lines)
+        self.index = InvertedIndex()
+
+    def _index_line(self, line: str, batch_id: int) -> None:
+        tokens = tokenize_line(line, ngrams=False)
+        self.stats.n_tokens_indexed += len(tokens)
+        self.index.add_line(tokens, batch_id)
+
+    def _seal_index(self) -> None:
+        self.index.seal()
+
+    def index_bytes(self) -> int:
+        return self.index.size_bits() // 8
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        return self.index.lookup_term(term.lower().encode())
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        """Lexicon-scan contains (§2.1).  Patterns that SPAN token
+        boundaries (e.g. the Log4Shell "${jndi") cannot match inside any
+        single lexicon entry; like a real query planner we AND the
+        postings of the pattern's full-token fragments, falling back to a
+        full scan when no fragment is indexed."""
+        needle = term.lower().encode()
+        direct = self.index.lookup_contains(needle)
+        if len(direct):
+            return direct
+        frags = [t for t in tokenize_line(term.lower(), ngrams=False)
+                 if t != needle]
+        out = None
+        for f in frags:
+            hit = self.index.lookup_contains(f)
+            if len(hit) == 0:
+                continue
+            out = hit if out is None else np.intersect1d(out, hit)
+        if out is None:  # nothing indexed covers the pattern: scan all
+            return np.arange(len(self.blobs), dtype=np.int64)
+        return out
+
+
+class BloomStore(LogStoreBase):
+    """One Bloom filter per batch (§2.2's trivial MS-MMQ extension)."""
+    name = "bloom"
+
+    def __init__(self, *, batch_lines: int = 512, bits_per_batch: int = 1 << 16,
+                 k: int = 4):
+        super().__init__(batch_lines=batch_lines)
+        self.bits_per_batch = bits_per_batch
+        self.k = k
+        self._pending: dict[int, list[np.ndarray]] = {}
+        self.sketch: BloomPerBatch | None = None
+
+    def _index_line(self, line: str, batch_id: int) -> None:
+        tokens = tokenize_line(line, ngrams=True)
+        self.stats.n_tokens_indexed += len(tokens)
+        fps = np.fromiter((token_fingerprint(t) for t in tokens),
+                          dtype=np.uint32, count=len(tokens))
+        self._pending.setdefault(batch_id, []).append(fps)
+
+    def _seal_index(self) -> None:
+        self.sketch = BloomPerBatch.build(len(self.blobs),
+                                          self.bits_per_batch, self.k)
+        for b, chunks in self._pending.items():
+            self.sketch.insert_batch(np.concatenate(chunks), b)
+        self._pending = {}
+
+    def index_bytes(self) -> int:
+        return self.sketch.size_bits() // 8 if self.sketch else 0
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        fps = [token_fingerprint(t) for t in term_query_tokens(term)]
+        return self.sketch.query_all_tokens(fps)
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        tokens = contains_query_tokens(term)
+        if not tokens:
+            return np.arange(len(self.blobs), dtype=np.int64)
+        fps = [token_fingerprint(t) for t in tokens]
+        return self.sketch.query_all_tokens(fps)
+
+
+ALL_STORES = {
+    "dynawarp": DynaWarpStore,
+    "csc": CscStore,
+    "lucene": LuceneStore,
+    "bloom": BloomStore,
+    "scan": ScanStore,
+}

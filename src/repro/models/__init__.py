@@ -1,0 +1,2 @@
+"""Model zoo: LM-family transformer (dense + MoE), MeshGraphNet GNN,
+recsys (xDeepFM / SASRec / MIND / two-tower)."""

@@ -1,0 +1,98 @@
+"""Shared neural-net layers: norms, MLPs, RoPE, initializers.
+
+Pure-JAX (no flax): params are nested dicts of jnp arrays; every layer is
+a pair (init_fn, apply_fn) so stacks can be created/vmapped/scanned freely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, weight=None, eps: float = 1e-6):
+    """RMSNorm; ``weight=None`` gives the non-parametric LN variant used by
+    OLMo (normalization without learned gain/bias)."""
+    x32 = x.astype(jnp.float32)
+    nrm = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1,
+                                       keepdims=True) + eps)
+    if weight is not None:
+        nrm = nrm * (1.0 + weight.astype(jnp.float32))
+    return nrm.astype(x.dtype)
+
+
+def layer_norm_nonparam(x, eps: float = 1e-5):
+    """Non-parametric LayerNorm (mean-centered, no gain/bias) — OLMo §3."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def mlp_init(rng, sizes: list[int], dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(ks[i], sizes[i], sizes[i + 1], dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype)
+        for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(params: dict, x, *, act=jax.nn.relu, final_act: bool = False):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rope_table(positions, d_head: int, theta: float = 10000.0,
+               dtype=jnp.float32):
+    """(..., d_head/2) cos/sin tables for the given positions."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, d_head); cos/sin: (..., S, d_head/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def softcap(logits, cap: float | None):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean CE over valid positions; logits f32-cast for stability."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

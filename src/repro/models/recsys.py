@@ -1,0 +1,416 @@
+"""RecSys model family: xDeepFM, SASRec, MIND, two-tower retrieval.
+
+JAX has no native EmbeddingBag or CSR sparse — the embedding lookup path is
+built here from ``jnp.take`` + ``jax.ops.segment_sum`` (and the Pallas
+kernel in kernels/embedding_bag accelerates the fixed-bag fast path).
+Tables are stored as ONE concatenated (sum_vocab, D) matrix with per-field
+row offsets so the whole lookup is a single gather; rows shard over the
+'model' mesh axis (the huge_embedding axis).
+
+Shapes contract (see configs/): every model exposes
+  loss(params, batch)                          -- training
+  serve_scores(params, batch)                  -- pointwise scoring
+  retrieval_scores(params, batch)              -- 1 query vs n_candidates
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_apply, mlp_init, rms_norm
+
+
+# ------------------------------------------------------------ embedding ops
+def embedding_bag(table, idx, *, mask=None, mode: str = "sum"):
+    """table (V, D); idx (..., bag) int32; mask (..., bag) or None.
+    Fixed-size-bag EmbeddingBag: gather + masked reduce.  This is the
+    jnp reference; kernels/embedding_bag provides the Pallas TPU version."""
+    e = jnp.take(table, idx, axis=0)                 # (..., bag, D)
+    if mask is not None:
+        e = e * mask[..., None].astype(e.dtype)
+    if mode == "sum":
+        return e.sum(axis=-2)
+    if mode == "mean":
+        den = (mask.sum(-1, keepdims=True) if mask is not None
+               else jnp.float32(idx.shape[-1]))
+        return e.sum(axis=-2) / jnp.maximum(den, 1.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table, indices, segment_ids, n_bags: int):
+    """Ragged EmbeddingBag via segment_sum (taxonomy §B.6): indices (nnz,),
+    segment_ids (nnz,) sorted bag ids."""
+    rows = jnp.take(table, indices, axis=0)
+    return jax.ops.segment_sum(rows, segment_ids, n_bags)
+
+
+def _field_offsets(vocab_sizes):
+    import numpy as np
+    off = np.zeros(len(vocab_sizes), np.int32)
+    off[1:] = np.cumsum(vocab_sizes)[:-1]
+    return jnp.asarray(off)
+
+
+# ----------------------------------------------------------------- xDeepFM
+@dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_sizes: tuple = (400, 400)
+    dtype: str = "float32"
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def param_count(self) -> int:
+        n = self.total_vocab * (self.embed_dim + 1)   # embed + wide
+        m = self.n_sparse
+        h_prev = m
+        for h in self.cin_layers:
+            n += h_prev * m * h
+            h_prev = h
+        sizes = [m * self.embed_dim] + list(self.mlp_sizes) + [1]
+        n += sum(sizes[i] * sizes[i + 1] + sizes[i + 1]
+                 for i in range(len(sizes) - 1))
+        n += sum(self.cin_layers) + 1
+        return n
+
+
+def xdeepfm_init(cfg: XDeepFMConfig, rng):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    m, d = cfg.n_sparse, cfg.embed_dim
+    cin = []
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append((jax.random.normal(ks[2], (h_prev * m, h), jnp.float32)
+                    * (h_prev * m) ** -0.5).astype(dt))
+        h_prev = h
+    return {
+        "table": (jax.random.normal(ks[0], (cfg.total_vocab, d), jnp.float32)
+                  * 0.01).astype(dt),
+        "wide": jnp.zeros((cfg.total_vocab,), dt),
+        "cin": cin,
+        "cin_out": jnp.zeros((sum(cfg.cin_layers),), dt),
+        "dnn": mlp_init(ks[3], [m * d] + list(cfg.mlp_sizes) + [1],
+                        jnp.float32),
+        "bias": jnp.zeros((), dt),
+    }
+
+
+def xdeepfm_logits(cfg: XDeepFMConfig, params, idx):
+    """idx (B, n_sparse) per-field ids (field-local)."""
+    abs_idx = idx + _field_offsets(
+        [cfg.vocab_per_field] * cfg.n_sparse)[None, :]
+    e = jnp.take(params["table"], abs_idx, axis=0)       # (B, m, D)
+    wide = jnp.take(params["wide"], abs_idx, axis=0).sum(-1)
+    # CIN (compressed interaction network)
+    x0, xk = e, e
+    pooled = []
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        b, h, m, d = z.shape
+        xk = jnp.einsum("bpd,ph->bhd", z.reshape(b, h * m, d), w)
+        pooled.append(xk.sum(-1))                        # (B, H_k)
+    cin_out = jnp.concatenate(pooled, -1) @ params["cin_out"]
+    dnn_out = mlp_apply(params["dnn"], e.reshape(e.shape[0], -1),
+                        act=jax.nn.relu)[..., 0]
+    return wide + cin_out + dnn_out + params["bias"]
+
+
+def xdeepfm_loss(cfg: XDeepFMConfig, params, batch):
+    logits = xdeepfm_logits(cfg, params, batch["idx"]).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, logits
+
+
+def xdeepfm_retrieval(cfg: XDeepFMConfig, params, batch):
+    """Bulk-score n_candidates items for ONE user context: the candidate id
+    replaces field 0; other fields broadcast."""
+    idx = jnp.broadcast_to(batch["idx"], (batch["cand"].shape[0],
+                                          cfg.n_sparse)).at[:, 0] \
+        .set(batch["cand"])
+    return xdeepfm_logits(cfg, params, idx)
+
+
+# ------------------------------------------------------------------ SASRec
+@dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 2 * (d * d + d) + 2 * d
+        return (self.n_items + self.seq_len) * d \
+            + self.n_blocks * per_block + d
+
+
+def sasrec_init(cfg: SASRecConfig, rng):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4 + 4 * cfg.n_blocks)
+    d = cfg.embed_dim
+
+    def w(k, shape, fan):
+        return (jax.random.normal(k, shape, jnp.float32)
+                * fan ** -0.5).astype(dt)
+
+    blocks = []
+    for i in range(cfg.n_blocks):
+        o = 4 + 4 * i
+        blocks.append({
+            "wq": w(ks[o], (d, d), d), "wk": w(ks[o + 1], (d, d), d),
+            "wv": w(ks[o + 2], (d, d), d), "wo": w(ks[o + 3], (d, d), d),
+            "ffn_w1": w(ks[o], (d, d), d), "ffn_b1": jnp.zeros((d,), dt),
+            "ffn_w2": w(ks[o + 1], (d, d), d), "ffn_b2": jnp.zeros((d,), dt),
+            "ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt),
+        })
+    return {
+        "item_emb": w(ks[0], (cfg.n_items, d), 20),
+        "pos_emb": w(ks[1], (cfg.seq_len, d), 20),
+        "ln_f": jnp.zeros((d,), dt),
+        "blocks": blocks,
+    }
+
+
+def sasrec_encode(cfg: SASRecConfig, params, seq):
+    """seq (B, L) item ids (0 = padding) -> (B, L, D) causal states."""
+    b, l = seq.shape
+    d = cfg.embed_dim
+    x = jnp.take(params["item_emb"], seq, axis=0) * (d ** 0.5) \
+        + params["pos_emb"][None, :l]
+    pad = (seq == 0)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    mask = causal[None] & ~pad[:, None, :]
+    for blk in params["blocks"]:
+        h = rms_norm(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(b, l, cfg.n_heads, -1)
+        k = (h @ blk["wk"]).reshape(b, l, cfg.n_heads, -1)
+        v = (h @ blk["wv"]).reshape(b, l, cfg.n_heads, -1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (q.shape[-1] ** 0.5)
+        s = jnp.where(mask[:, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, l, d)
+        x = x + o @ blk["wo"]
+        h2 = rms_norm(x, blk["ln2"])
+        x = x + jax.nn.relu(h2 @ blk["ffn_w1"] + blk["ffn_b1"]) \
+            @ blk["ffn_w2"] + blk["ffn_b2"]
+    return rms_norm(x, params["ln_f"]) * (~pad)[..., None].astype(x.dtype)
+
+
+def sasrec_loss(cfg: SASRecConfig, params, batch):
+    """BCE over (positive next item, sampled negative) — the paper's
+    objective.  batch: seq (B, L), pos (B, L), neg (B, L)."""
+    h = sasrec_encode(cfg, params, batch["seq"])
+    pe = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    ne = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    sp = jnp.sum(h * pe, -1).astype(jnp.float32)
+    sn = jnp.sum(h * ne, -1).astype(jnp.float32)
+    m = (batch["pos"] != 0).astype(jnp.float32)
+    loss = -(jnp.log(jax.nn.sigmoid(sp) + 1e-24)
+             + jnp.log(1 - jax.nn.sigmoid(sn) + 1e-24)) * m
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(m), 1.0), sp
+
+
+def sasrec_serve(cfg: SASRecConfig, params, batch):
+    """Score provided candidates per request: seq (B, L), cand (B, C)."""
+    h = sasrec_encode(cfg, params, batch["seq"])[:, -1]
+    ce = jnp.take(params["item_emb"], batch["cand"], axis=0)
+    return jnp.einsum("bd,bcd->bc", h, ce)
+
+
+def sasrec_retrieval(cfg: SASRecConfig, params, batch):
+    """One user vs the whole (n_candidates,) corpus — batched dot."""
+    h = sasrec_encode(cfg, params, batch["seq"])[:, -1]     # (1, D)
+    ce = jnp.take(params["item_emb"], batch["cand"], axis=0)  # (C, D)
+    return (h @ ce.T)[0]
+
+
+# -------------------------------------------------------------------- MIND
+@dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        return self.n_items * d + d * d + 2 * (d * d + d)
+
+
+def mind_init(cfg: MINDConfig, rng):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    d = cfg.embed_dim
+    return {
+        "item_emb": (jax.random.normal(ks[0], (cfg.n_items, d), jnp.float32)
+                     * 0.02).astype(dt),
+        "S": (jax.random.normal(ks[1], (d, d), jnp.float32)
+              * d ** -0.5).astype(dt),            # shared bilinear map
+        "dnn": mlp_init(ks[2], [d, d, d], jnp.float32),
+        # fixed (untrained) routing-logit init per (interest, position):
+        # the paper samples these from N(0,1) once
+        "b_init": jax.random.normal(ks[3], (cfg.n_interests, cfg.seq_len),
+                                    jnp.float32).astype(dt),
+    }
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axis,
+                 keepdims=True)
+    return (n2 / (1 + n2) * x.astype(jnp.float32)
+            / jnp.sqrt(n2 + 1e-9)).astype(x.dtype)
+
+
+def mind_interests(cfg: MINDConfig, params, seq):
+    """Behavior-to-Interest dynamic routing: seq (B, L) -> (B, K, D)."""
+    e = jnp.take(params["item_emb"], seq, axis=0)        # (B, L, D)
+    valid = (seq != 0)
+    eh = e @ params["S"]                                  # (B, L, D)
+    b_logit = jnp.broadcast_to(params["b_init"][None],
+                               (seq.shape[0], cfg.n_interests, cfg.seq_len))
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_logit, axis=1)               # over interests
+        w = w * valid[:, None, :].astype(w.dtype)
+        z = jnp.einsum("bkl,bld->bkd", w, eh)
+        u = _squash(z)
+        b_logit = b_logit + jnp.einsum("bkd,bld->bkl", u, eh)
+    u = mlp_apply(params["dnn"], u, act=jax.nn.relu) + u  # H-layer + skip
+    return u                                              # (B, K, D)
+
+
+def mind_loss(cfg: MINDConfig, params, batch):
+    """Sampled-softmax with label-aware attention (pow 2): batch has
+    seq (B, L), pos (B,), neg (B, N)."""
+    u = mind_interests(cfg, params, batch["seq"])         # (B, K, D)
+    pe = jnp.take(params["item_emb"], batch["pos"], axis=0)   # (B, D)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", u, pe).astype(jnp.float32) ** 2, -1)
+    v_u = jnp.einsum("bk,bkd->bd", att.astype(u.dtype), u)    # (B, D)
+    ne = jnp.take(params["item_emb"], batch["neg"], axis=0)   # (B, N, D)
+    sp = jnp.sum(v_u * pe, -1, keepdims=True)
+    sn = jnp.einsum("bd,bnd->bn", v_u, ne)
+    logits = jnp.concatenate([sp, sn], -1).astype(jnp.float32)
+    loss = -jax.nn.log_softmax(logits, -1)[:, 0]
+    return jnp.mean(loss), logits
+
+
+def mind_serve(cfg: MINDConfig, params, batch):
+    """Max-over-interests scoring of per-request candidates."""
+    u = mind_interests(cfg, params, batch["seq"])
+    ce = jnp.take(params["item_emb"], batch["cand"], axis=0)  # (B, C, D)
+    return jnp.max(jnp.einsum("bkd,bcd->bkc", u, ce), axis=1)
+
+
+def mind_retrieval(cfg: MINDConfig, params, batch):
+    u = mind_interests(cfg, params, batch["seq"])         # (1, K, D)
+    ce = jnp.take(params["item_emb"], batch["cand"], axis=0)  # (C, D)
+    return jnp.max(u[0] @ ce.T, axis=0)                   # (C,)
+
+
+# ---------------------------------------------------------------- twotower
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    n_user_fields: int = 8
+    n_item_fields: int = 4
+    field_vocab: int = 1_000_000
+    field_dim: int = 64
+    n_corpus: int = 1_000_000
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        n = (self.n_user_fields + self.n_item_fields) * self.field_vocab \
+            * self.field_dim
+        for nf in (self.n_user_fields, self.n_item_fields):
+            sizes = [nf * self.field_dim] + list(self.tower_mlp)
+            n += sum(sizes[i] * sizes[i + 1] + sizes[i + 1]
+                     for i in range(len(sizes) - 1))
+        n += self.n_corpus * self.tower_mlp[-1]
+        return n
+
+
+def twotower_init(cfg: TwoTowerConfig, rng):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+
+    def table(k, fields):
+        return (jax.random.normal(
+            k, (fields * cfg.field_vocab, cfg.field_dim), jnp.float32)
+            * 0.02).astype(dt)
+
+    return {
+        "user_table": table(ks[0], cfg.n_user_fields),
+        "item_table": table(ks[1], cfg.n_item_fields),
+        "user_mlp": mlp_init(ks[2], [cfg.n_user_fields * cfg.field_dim]
+                             + list(cfg.tower_mlp), jnp.float32),
+        "item_mlp": mlp_init(ks[3], [cfg.n_item_fields * cfg.field_dim]
+                             + list(cfg.tower_mlp), jnp.float32),
+        # serving-side precomputed ANN corpus (item embeddings)
+        "corpus": (jax.random.normal(ks[4], (cfg.n_corpus, cfg.tower_mlp[-1]),
+                                     jnp.float32) * 0.05).astype(dt),
+    }
+
+
+def _tower(mlp, table, offsets, idx):
+    e = jnp.take(table, idx + offsets[None, :], axis=0)
+    e = e.reshape(e.shape[0], -1)
+    z = mlp_apply(mlp, e, act=jax.nn.relu)
+    return z / jnp.maximum(jnp.linalg.norm(z.astype(jnp.float32), axis=-1,
+                                           keepdims=True), 1e-6).astype(z.dtype)
+
+
+def twotower_embed(cfg: TwoTowerConfig, params, batch):
+    u = _tower(params["user_mlp"], params["user_table"],
+               _field_offsets([cfg.field_vocab] * cfg.n_user_fields),
+               batch["user_idx"])
+    i = _tower(params["item_mlp"], params["item_table"],
+               _field_offsets([cfg.field_vocab] * cfg.n_item_fields),
+               batch["item_idx"])
+    return u, i
+
+
+def twotower_loss(cfg: TwoTowerConfig, params, batch):
+    """In-batch sampled softmax with logQ correction (Yi et al. RecSys'19).
+    batch: user_idx (B, Fu), item_idx (B, Fi), logq (B,)."""
+    u, i = twotower_embed(cfg, params, batch)
+    logits = (u @ i.T).astype(jnp.float32) / cfg.temperature
+    logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(u.shape[0])
+    loss = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                labels[:, None], -1)[:, 0]
+    return jnp.mean(loss), logits
+
+
+def twotower_serve(cfg: TwoTowerConfig, params, batch):
+    u, i = twotower_embed(cfg, params, batch)
+    return jnp.sum(u * i, axis=-1)
+
+
+def twotower_retrieval(cfg: TwoTowerConfig, params, batch):
+    """One user query against the 1M-item precomputed corpus: a single
+    (1, D) x (D, C) GEMV (Pallas kernels/retrieval_score fast path)."""
+    u = _tower(params["user_mlp"], params["user_table"],
+               _field_offsets([cfg.field_vocab] * cfg.n_user_fields),
+               batch["user_idx"])                            # (1, D)
+    return (u @ params["corpus"].T)[0]                       # (C,)

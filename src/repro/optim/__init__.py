@@ -1,0 +1,8 @@
+"""Optimizers: pure-JAX AdamW and Adafactor (factored second moment)."""
+from .adam import AdamConfig, AdamState, adam_update, global_norm, init_adam
+from .adafactor import (AdafactorConfig, AdafactorState, adafactor_update,
+                        init_adafactor)
+
+__all__ = ["AdamConfig", "AdamState", "adam_update", "global_norm",
+           "init_adam", "AdafactorConfig", "AdafactorState",
+           "adafactor_update", "init_adafactor"]

@@ -1,0 +1,81 @@
+"""Pure-JAX AdamW with mixed-precision state and gradient clipping.
+
+Parameters may be bf16 (compute dtype); first/second moments are always
+f32.  Weight decay is decoupled (AdamW).  No optax dependency — the
+optimizer state is a plain pytree so it shards/checkpoints like params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object      # pytree like params, f32
+    nu: object      # pytree like params, f32
+
+
+def init_adam(params) -> AdamState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(f32, params),
+                     nu=jax.tree.map(f32, params))
+
+
+def _schedule(cfg: AdamConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adam_update(cfg: AdamConfig, params, grads, state: AdamState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1t
+        nhat = nu / b2t
+        delta = lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_mu, nu=new_nu), \
+        dict(grad_norm=gnorm, lr=lr)

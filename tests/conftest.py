@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.logstore.datasets import generate_dataset
+    return generate_dataset("test", n_lines=2000, n_sources=12, seed=7)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,73 @@
+"""Hash primitives: scalar / numpy / jnp agreement + the paper's
+commutative postings hash (Def. 3.1/3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+
+
+@given(st.binary(min_size=0, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_fingerprint_scalar_vs_numpy(token):
+    n = len(token)
+    packed = np.zeros((1, max(n, 1)), np.uint8)
+    packed[0, :n] = np.frombuffer(token, np.uint8)
+    fp_np = H.np_token_fingerprints(packed, np.asarray([n]))
+    assert int(fp_np[0]) == H.token_fingerprint(token)
+
+
+def test_fingerprint_numpy_vs_jnp(rng):
+    toks = rng.integers(0, 256, (64, 24)).astype(np.uint8)
+    lens = rng.integers(0, 25, 64).astype(np.int32)
+    for i in range(64):
+        toks[i, lens[i]:] = 0
+    a = H.np_token_fingerprints(toks, lens)
+    b = np.asarray(H.jnp_token_fingerprints(jnp.asarray(toks),
+                                            jnp.asarray(lens)))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.lists(st.integers(0, 2**16 - 1), min_size=1, max_size=50,
+                unique=True))
+@settings(max_examples=50, deadline=None)
+def test_postings_hash_commutative(postings):
+    """XOR-combined LCG hash is order independent (Def. 3.1)."""
+    import random
+    shuffled = postings[:]
+    random.Random(42).shuffle(shuffled)
+    assert H.postings_hash(postings) == H.postings_hash(shuffled)
+
+
+@given(st.sets(st.integers(0, 2**16 - 1), min_size=2, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_postings_hash_incremental(postings):
+    """hash(P u {p}) == hash(P) XOR hash_element(p) — the O(1) update."""
+    postings = sorted(postings)
+    head, last = postings[:-1], postings[-1]
+    assert (H.postings_hash(head) ^ H.posting_element_hash(last)
+            == H.postings_hash(postings))
+
+
+def test_lcg_matches_definition():
+    x0 = 12345
+    assert H.lcg_step(x0) == (H.LCG_A * x0 + H.LCG_C) % (1 << 64)
+
+
+def test_posting_element_hash_u32_pair():
+    """The TPU hi/lo u32 emulation equals the 64-bit LCG step."""
+    ps = np.asarray([0, 1, 7, 65535, 2**31], np.uint32)
+    hi, lo = H.jnp_posting_element_hash(jnp.asarray(ps))
+    for i, p in enumerate(ps):
+        full = H.lcg_step(int(p))
+        assert (int(hi[i]) << 32) | int(lo[i]) == full
+
+
+def test_seeded_hash_consistency():
+    fps = np.asarray([1, 2, 3, 0xFFFFFFFF], np.uint32)
+    a = H.np_seeded_hash32(fps, 0xABCD)
+    b = np.asarray(H.seeded_hash32(jnp.asarray(fps), 0xABCD))
+    np.testing.assert_array_equal(a, b)
+    assert H.scalar_seeded_hash32(1, 0xABCD) == int(a[0])

@@ -1,0 +1,250 @@
+"""Mutable sketch (Alg. 1/2 online dedup), batch builder equivalence,
+BIC/CSF coding, MPHF, immutable sketch guarantees."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.batch_builder import build_sealed
+from repro.core.bic import bic_encode, bic_decode, decode_list, encode_lists
+from repro.core.bitio import BitReader, BitWriter
+from repro.core.csf import build_csf
+from repro.core.hashing import postings_hash
+from repro.core.immutable_sketch import build_immutable
+from repro.core.mphf import build_mphf
+from repro.core.mutable_sketch import MutableSketch
+from repro.core.postings import PostingList
+from repro.core.segment import SegmentWriter, merge_sealed
+
+
+# --------------------------------------------------------------- postings
+@given(st.sets(st.integers(0, 4095), min_size=1, max_size=200))
+@settings(max_examples=40, deadline=None)
+def test_posting_list_short_long_transition(postings):
+    pl = PostingList(threshold=16)
+    for p in postings:
+        pl.add(p)
+        pl.add(p)  # repeated insert must be a no-op (paper §3.2)
+    got = np.asarray(sorted(postings))
+    np.testing.assert_array_equal(pl.postings(), got)
+    assert len(pl) == len(postings)
+
+
+# ------------------------------------------------------------- mutable
+def _random_corpus(rng, n_tokens=300, n_postings=24, n_pairs=2000):
+    fps = rng.integers(0, n_tokens, n_pairs).astype(np.uint32) * 2654435761
+    posts = rng.integers(0, n_postings, n_pairs).astype(np.int64)
+    return fps.astype(np.uint32), posts
+
+
+def test_online_dedup_invariants():
+    """After any insert sequence: tokens with identical posting sets share
+    ONE posting list (the paper's >88% list dedup) — i.e. the sealed
+    content has exactly as many lists as there are distinct posting sets.
+    Few postings (6) guarantees set collisions across 300 tokens."""
+    rng = np.random.default_rng(42)
+    fps, posts = _random_corpus(rng, n_postings=6)
+    sk = MutableSketch()
+    for f, p in zip(fps, posts):
+        sk.add_fingerprint(int(f), int(p))
+    by_set = {}
+    for f in np.unique(fps):
+        got = sk.acquire_postings(int(f))
+        assert got is not None
+        by_set.setdefault(tuple(got.tolist()), set()).add(int(f))
+    sealed = sk.seal()
+    lists = sealed.canonical_lists()
+    assert len(lists) == len(by_set)
+    # dedup must be substantial on a Zipf-ish corpus
+    assert len(lists) < len(np.unique(fps))
+
+
+def test_online_equals_batch_builder(rng):
+    """Property: the faithful Alg.1/2 mutable sketch and the TPU-idiomatic
+    sort-based batch builder produce identical sealed content."""
+    for trial in range(5):
+        fps, posts = _random_corpus(np.random.default_rng(trial))
+        sk = MutableSketch()
+        for f, p in zip(fps, posts):
+            sk.add_fingerprint(int(f), int(p))
+        sealed_online = sk.seal()
+        sealed_batch = build_sealed(fps, posts)
+        assert (sorted(sealed_online.canonical_lists())
+                == sorted(sealed_batch.canonical_lists()))
+
+
+def test_lookup_map_collision_handling():
+    """Alg. 1/2: lists colliding on the postings hash stay retrievable
+    after inserts AND removals."""
+    sk = MutableSketch()
+    # craft tokens sharing posting sets to force reference churn
+    for f in range(50):
+        sk.add_fingerprint(f, 0)
+    for f in range(25):
+        sk.add_fingerprint(f, 1)   # half the tokens move to {0,1}
+    for f in range(50):
+        got = set(sk.acquire_postings(f).tolist())
+        assert got == ({0, 1} if f < 25 else {0})
+
+
+def test_segment_spill_merge_equivalence(rng):
+    fps, posts = _random_corpus(rng, n_pairs=9000)
+    w = SegmentWriter(memory_limit_bytes=1 << 12)  # force many spills
+    for f, p in zip(fps, posts):
+        w.add_fingerprints(np.asarray([f], np.uint32), int(p))
+    spilled = w.finish()
+    assert w.n_spills > 0  # the tiny memory limit must have forced spills
+    direct = build_immutable(build_sealed(fps, posts))
+    for f in np.unique(fps)[:100]:
+        pres_a, rank_a = spilled.probe_fingerprints_np(
+            np.asarray([f], np.uint32))
+        pres_b, rank_b = direct.probe_fingerprints_np(
+            np.asarray([f], np.uint32))
+        assert pres_a[0] and pres_b[0]
+        np.testing.assert_array_equal(
+            spilled.postings_for_rank(int(rank_a[0])),
+            direct.postings_for_rank(int(rank_b[0])))
+
+
+# ------------------------------------------------------------------ BIC
+@given(st.sets(st.integers(0, 2**15), min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_bic_roundtrip(postings):
+    arr = np.asarray(sorted(postings), np.int64)
+    hi = int(arr.max()) + 1
+    w = BitWriter()
+    bic_encode(arr, 0, hi, w)
+    out = bic_decode(len(arr), 0, hi, BitReader(w.array()))
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_bic_encode_lists_offsets(rng):
+    lists = [np.unique(rng.integers(0, 512, rng.integers(1, 60)))
+             for _ in range(30)]
+    bitseq, offsets, counts = encode_lists(lists, 512)
+    for i, l in enumerate(lists):
+        np.testing.assert_array_equal(
+            decode_list(bitseq, offsets, counts, i, 512), l)
+
+
+# ------------------------------------------------------------------ CSF
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=400))
+@settings(max_examples=30, deadline=None)
+def test_csf_roundtrip(values):
+    vals = np.asarray(values, np.int64)
+    csf = build_csf(vals)
+    np.testing.assert_array_equal(csf.get_np(np.arange(len(vals))), vals)
+    # jnp path agrees
+    got = np.asarray(csf.get_jnp(jnp.arange(len(vals))))
+    np.testing.assert_array_equal(got, vals)
+
+
+def test_csf_skew_compresses_better_than_uniform():
+    """Frequency-ranked coding (§3.3): the most common value gets rank 0
+    (1 bit), so a skewed distribution encodes smaller than a uniform one
+    over the same number of keys."""
+    from repro.core.csf import code_length
+    assert code_length(np.asarray([0]))[0] == 1
+    assert code_length(np.asarray([1]))[0] == 1
+    assert code_length(np.asarray([2]))[0] == 2
+    skew = np.asarray([7] * 500 + [3] * 20 + [9] * 2, np.int64)
+    uni = np.arange(522, dtype=np.int64) % 64
+    assert build_csf(skew).size_bits() < build_csf(uni).size_bits()
+
+
+# ----------------------------------------------------------------- MPHF
+@given(st.sets(st.integers(0, 2**32 - 1), min_size=1, max_size=2000))
+@settings(max_examples=15, deadline=None)
+def test_mphf_minimal_injective(keys):
+    keys = np.asarray(sorted(keys), np.uint32)
+    m = build_mphf(keys)
+    idx, absent = m.lookup_np(keys)
+    assert not absent.any()
+    np.testing.assert_array_equal(np.sort(idx), np.arange(len(keys)))
+
+
+def test_mphf_np_vs_jnp(rng):
+    keys = np.unique(rng.integers(0, 2**32, 4000, dtype=np.uint64)
+                     .astype(np.uint32))
+    m = build_mphf(keys)
+    q = np.concatenate([keys[:500],
+                        rng.integers(0, 2**32, 500, dtype=np.uint64)
+                        .astype(np.uint32)])
+    a_i, a_a = m.lookup_np(q)
+    b_i, b_a = m.lookup_jnp(jnp.asarray(q))
+    np.testing.assert_array_equal(a_a, np.asarray(b_a))
+    np.testing.assert_array_equal(a_i[~a_a], np.asarray(b_i)[~a_a])
+
+
+# ------------------------------------------------------- immutable sketch
+def test_immutable_zero_false_negatives(rng):
+    fps, posts = _random_corpus(rng, n_pairs=4000)
+    sk = build_immutable(build_sealed(fps, posts), sig_bits=8)
+    for f in np.unique(fps):
+        truth = np.unique(posts[fps == f])
+        present, rank = sk.probe_fingerprints_np(
+            np.asarray([f], np.uint32))
+        assert present[0], "false negative!"
+        np.testing.assert_array_equal(
+            sk.postings_for_rank(int(rank[0])), truth)
+
+
+def test_immutable_fp_rate_matches_signature_bits(rng):
+    """FP rate for unseen tokens ~= 2^-b (paper §3.3)."""
+    fps, posts = _random_corpus(rng, n_pairs=4000)
+    sk = build_immutable(build_sealed(fps, posts), sig_bits=8)
+    probe = rng.integers(0, 2**32, 20000, dtype=np.uint64).astype(np.uint32)
+    probe = probe[~np.isin(probe, fps)]
+    present, _ = sk.probe_fingerprints_np(probe)
+    fp_rate = present.mean()
+    assert fp_rate < 4 * 2**-8, fp_rate  # loose 4x bound on 2^-8
+
+
+def test_immutable_jnp_probe_agrees(rng):
+    fps, posts = _random_corpus(rng)
+    sk = build_immutable(build_sealed(fps, posts), sig_bits=8)
+    q = np.unique(fps)[:200]
+    a_p, a_r = sk.probe_fingerprints_np(q)
+    b_p, b_r = sk.probe_fingerprints_jnp(jnp.asarray(q))
+    np.testing.assert_array_equal(a_p, np.asarray(b_p))
+    np.testing.assert_array_equal(a_r[a_p], np.asarray(b_r)[a_p])
+
+
+def test_device_batched_query_equals_host(rng):
+    """Beyond-paper device query engine == host Alg. 3 (AND/OR)."""
+    from repro.core.device_query import batched_query, bitmap_to_postings
+    from repro.core.query import query_and, query_or
+    fps, posts = _random_corpus(rng, n_pairs=4000)
+    sk = build_immutable(build_sealed(fps, posts), sig_bits=8,
+                         plane_budget_bytes=64 << 20)
+    assert sk.planes is not None
+    uniq = np.unique(fps)
+    # build 16 queries of 3 tokens each (mix of present and absent)
+    q = np.stack([np.concatenate([uniq[i:i + 2],
+                                  [rng.integers(0, 2**32, dtype=np.uint64)
+                                   .astype(np.uint32)]])
+                  for i in range(0, 32, 2)]).astype(np.uint32)
+    bm_and, cnt_and = batched_query(sk, q, op="and")
+    bm_or, cnt_or = batched_query(sk, q, op="or")
+    for i in range(q.shape[0]):
+        want_and = query_and(sk, [int(x) for x in q[i]])
+        want_or = query_or(sk, [int(x) for x in q[i]])
+        got_and = bitmap_to_postings(np.asarray(bm_and[i]), sk.n_postings)
+        got_or = bitmap_to_postings(np.asarray(bm_or[i]), sk.n_postings)
+        np.testing.assert_array_equal(got_and, want_and)
+        np.testing.assert_array_equal(got_or, want_or)
+        assert int(cnt_and[i]) == len(want_and)
+        assert int(cnt_or[i]) == len(want_or)
+
+
+def test_bic_subbit_compression_on_clusters():
+    """Paper §4.2: BIC approaches <1 bit/posting on clustered lists."""
+    runs = np.concatenate([np.arange(s, s + 400)
+                           for s in (0, 1000, 5000)])
+    w = BitWriter()
+    bic_encode(runs, 0, 6000, w)
+    bits = w.bitpos
+    assert bits / len(runs) < 1.5, bits / len(runs)
+    out = bic_decode(len(runs), 0, 6000, BitReader(w.array()))
+    np.testing.assert_array_equal(out, runs)

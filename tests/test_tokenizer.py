@@ -1,0 +1,58 @@
+"""Tokenization rules 1-8 (paper §5.1.1)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tokenizer import (contains_query_tokens, pack_tokens,
+                                  term_query_tokens, tokenize_line)
+
+
+def test_rules_examples():
+    toks = tokenize_line("WARNING: name@company 192.0.0.1 äöü ${jndi")
+    # rule 1: alnum sequences
+    assert b"warning" in toks
+    # rule 4: separator-joined pair
+    assert b"name@company" in toks
+    # rule 5: three dot-joined alnum tokens
+    assert b"192.0.0" in toks
+    # rule 6: 3-grams of alnum tokens
+    for g in (b"war", b"arn", b"rni", b"nin", b"ing"):
+        assert g in toks
+    # rule 7: non-alnum 1/2/3-grams  (the Log4Shell "${" case)
+    assert b"$" in toks and b"${" in toks
+    # rule 8: non-ascii 2-grams
+    assert "äö".encode() in toks
+
+
+def test_ngram_rule6_exact():
+    toks = tokenize_line("warning", ngrams=True)
+    grams = {t for t in toks if len(t) == 3}
+    expect = {b"war", b"arn", b"rni", b"nin", b"ing"}
+    assert expect <= grams
+
+
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+               min_size=0, max_size=120))
+@settings(max_examples=80, deadline=None)
+def test_contains_tokens_subset_of_indexed(line):
+    """Every contains-query n-gram of an indexed substring must have been
+    indexed — the zero-false-negative prerequisite."""
+    indexed = tokenize_line(line, ngrams=True)
+    # pick a random-ish substring
+    if len(line) >= 6:
+        sub = line[1:-1]
+        for t in contains_query_tokens(sub):
+            assert t in indexed, (t, sub)
+
+
+def test_term_query_tokens_roundtrip():
+    assert b"restart" in term_query_tokens("Restart")
+    assert term_query_tokens("192.0.0") == [b"192.0.0"]
+
+
+def test_pack_tokens_shapes():
+    toks = [b"abc", b"de", b"f" * 64]
+    packed, lens = pack_tokens(toks, max_len=32)
+    assert packed.shape == (3, 32)
+    assert list(lens) == [3, 2, 32]
+    assert bytes(packed[0, :3]) == b"abc"
+    assert (packed[0, 3:] == 0).all()
