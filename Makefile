@@ -1,0 +1,13 @@
+PYTHONPATH := src
+
+.PHONY: test bench example
+
+# tier-1 verify (ROADMAP.md)
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+example:
+	PYTHONPATH=$(PYTHONPATH) python examples/batched_query.py

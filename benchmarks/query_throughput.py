@@ -1,8 +1,55 @@
 """Table 3: query throughput (queries/s) per scenario x store x dataset.
 Cold-ish protocol: every query decompresses + Boyer-Moore-post-filters
-its candidate batches, so false positives cost real work."""
+its candidate batches, so false positives cost real work.
+
+The extra ``device_query`` scenario times the candidate-generation index
+probe itself — the paper's sequential host loop (Alg. 3, one token probe
+at a time) against the batched QueryEngine (one device dispatch per wave
+through the Pallas probe + bitset kernels) — on the same DynaWarp store.
+"""
+import time
+
 from .common import (DATASETS, QUERY_SCENARIOS, build_store, load_dataset,
                      time_queries)
+
+
+def _time_waves(fn, *, min_time_s: float = 0.5):
+    """Time repeated calls of a whole-wave callable; q/s over the wave."""
+    n_queries = fn()  # warm-up (also jit-compiles the bucket shape)
+    waves, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < min_time_s:
+        fn()
+        waves += 1
+    return waves * n_queries / (time.perf_counter() - t0)
+
+
+def _device_query_rows(ds_name: str, dw, table: dict):
+    from repro.core.query import query_and
+    from repro.core.tokenizer import term_query_tokens
+    from repro.logstore.datasets import id_queries
+
+    wave = id_queries(31, 20) * 256         # 5120 term(ID) queries
+    token_lists = [term_query_tokens(t) for t in wave]
+
+    def host_loop():
+        for toks in token_lists:
+            query_and(dw.sketch, toks)
+        return len(wave)
+
+    def engine_wave():
+        dw.engine.query_batch(token_lists, op="and")
+        return len(wave)
+
+    host_qps = _time_waves(host_loop)
+    eng_qps = _time_waves(engine_wave)
+    speedup = eng_qps / max(host_qps, 1e-9)
+    table[f"{ds_name}/device_query/host_loop"] = round(host_qps, 2)
+    table[f"{ds_name}/device_query/engine"] = round(eng_qps, 2)
+    table[f"{ds_name}/device_query/engine_speedup"] = round(speedup, 2)
+    print(f"[query] {ds_name:14s} {'device_query':16s} host_loop "
+          f"{host_qps:10.2f} q/s", flush=True)
+    print(f"[query] {ds_name:14s} {'device_query':16s} engine    "
+          f"{eng_qps:10.2f} q/s  ({speedup:.1f}x)", flush=True)
 
 
 def run(results: dict):
@@ -18,6 +65,7 @@ def run(results: dict):
                 table[f"{ds_name}/{scen}/{sname}"] = round(qps, 2)
                 print(f"[query] {ds_name:14s} {scen:16s} {sname:9s} "
                       f"{qps:10.2f} q/s", flush=True)
+        _device_query_rows(ds_name, stores["dynawarp"], table)
         # paper headline: needle-in-haystack speedup vs linear scan
         base = table[f"{ds_name}/term(ID)/scan"]
         for sname in ("dynawarp", "csc", "lucene"):

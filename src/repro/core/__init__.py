@@ -9,13 +9,15 @@ from .hashing import postings_hash, token_fingerprint
 from .immutable_sketch import ImmutableSketch, build_immutable
 from .mutable_sketch import MutableSketch, SealedContent
 from .query import AndConsumer, OrConsumer, execute_query, query_and, query_or
+from .query_engine import QueryEngine
 from .segment import SegmentWriter, merge_sealed
 from .tokenizer import (contains_query_tokens, pack_tokens, term_query_tokens,
                         tokenize_line)
 
 __all__ = [
     "AndConsumer", "ImmutableSketch", "MutableSketch", "OrConsumer",
-    "SealedContent", "SegmentWriter", "build_immutable", "build_sealed",
+    "QueryEngine", "SealedContent", "SegmentWriter", "build_immutable",
+    "build_sealed",
     "build_sealed_from_lines", "contains_query_tokens", "execute_query",
     "merge_sealed", "pack_tokens", "postings_hash", "query_and", "query_or",
     "term_query_tokens", "token_fingerprint", "tokenize_line",

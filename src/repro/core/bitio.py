@@ -64,6 +64,47 @@ def peek_bits(words: np.ndarray, bitpos: int, nbits: int) -> int:
     return lo & ((1 << nbits) - 1)
 
 
+def pack_fixed_width(values: np.ndarray, nbits: int) -> np.ndarray:
+    """Vectorized BitWriter for fixed-width codes: packs ``values[i]`` at
+    bit position ``i * nbits``.  Bit-identical to writing each value with
+    :class:`BitWriter` (little-endian u32 words)."""
+    if not 0 < nbits <= 32:
+        raise ValueError(f"nbits={nbits} out of range")
+    values = np.asarray(values, dtype=np.uint64) \
+        & np.uint64((1 << nbits) - 1)
+    n = values.size
+    total_bits = n * nbits
+    n_words = max((total_bits + 31) // 32, 1)
+    words = np.zeros(n_words + 1, dtype=np.uint32)  # +1: spill headroom
+    bitpos = np.arange(n, dtype=np.int64) * nbits
+    word = bitpos >> 5
+    off = (bitpos & 31).astype(np.uint64)
+    shifted = values << off                      # <= 63 bits used
+    np.bitwise_or.at(words, word,
+                     (shifted & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    np.bitwise_or.at(words, word + 1,
+                     (shifted >> np.uint64(32)).astype(np.uint32))
+    return words[:n_words]
+
+
+def pack_bitmap_planes(lists, n_postings: int) -> np.ndarray:
+    """Vectorized dense-bitmap builder: ``lists[r]`` (sorted int64 posting
+    ids) becomes row ``r`` of an (L, ceil(P/32)) u32 plane matrix."""
+    n_lists = len(lists)
+    words = (max(n_postings, 1) + 31) // 32
+    planes = np.zeros((n_lists, words), dtype=np.uint32)
+    if n_lists == 0:
+        return planes
+    lengths = np.asarray([len(l) for l in lists], dtype=np.int64)
+    if lengths.sum() == 0:
+        return planes
+    flat = np.concatenate([np.asarray(l, dtype=np.int64) for l in lists])
+    row = np.repeat(np.arange(n_lists, dtype=np.int64), lengths)
+    np.bitwise_or.at(planes.reshape(-1), row * words + (flat >> 5),
+                     np.uint32(1) << (flat & 31).astype(np.uint32))
+    return planes
+
+
 def np_peek_bits(words: np.ndarray, bitpos: np.ndarray, nbits: np.ndarray
                  ) -> np.ndarray:
     """Vectorized bit-field gather: out[i] = bits[bitpos[i] : +nbits[i]]."""

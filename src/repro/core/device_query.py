@@ -17,35 +17,34 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 
-def batched_match_bitmaps(sketch, fps, arrs=None):
+def batched_match_bitmaps(sketch, fps, arrs=None, *, use_kernel=False):
     """fps (Q, T) int32/uint32 -> (Q, T, W) uint32 posting bitmaps
     (absent tokens give zero rows)."""
     q, t = fps.shape
-    rows = sketch.match_bitmap_jnp(jnp.asarray(fps).reshape(-1), arrs)
+    rows = sketch.match_bitmap_jnp(jnp.asarray(fps).reshape(-1), arrs,
+                                   use_kernel=use_kernel)
     return rows.reshape(q, t, -1)
 
 
-def batched_query(sketch, fps, *, op: str = "and", arrs=None):
+def batched_query(sketch, fps, *, op: str = "and", arrs=None,
+                  use_kernel=True):
     """Alg. 3 for a (Q, T) token batch in one jit.
 
     Returns (bitmaps (Q, W) uint32, counts (Q,) int32).  ``op='and'``:
     batches containing every token of the query; ``'or'``: any token.
-    """
-    planes = batched_match_bitmaps(sketch, fps, arrs)   # (Q, T, W)
-    if op == "and":
-        combined = planes[:, 0]
-        for i in range(1, planes.shape[1]):
-            combined = combined & planes[:, i]
-    else:
-        combined = planes[:, 0]
-        for i in range(1, planes.shape[1]):
-            combined = combined | planes[:, i]
-    counts = jax.lax.population_count(combined).sum(-1).astype(jnp.int32)
-    return combined, counts
+    ``use_kernel=True`` routes the MPHF probe and the T-axis plane
+    reduction through the Pallas ``sketch_probe`` / ``bitset_ops``
+    kernels; ``False`` keeps the pure-jnp mirror (the oracle path)."""
+    planes = batched_match_bitmaps(sketch, fps, arrs,
+                                   use_kernel=use_kernel)   # (Q, T, W)
+    if use_kernel:
+        from ..kernels.bitset_ops.ops import bitset_reduce_batch
+        return bitset_reduce_batch(planes, op=op)
+    from ..kernels.bitset_ops.ref import bitset_reduce_batch_ref
+    return bitset_reduce_batch_ref(planes, op=op)
 
 
 def bitmap_to_postings(bitmap_row: np.ndarray, n_postings: int) -> np.ndarray:

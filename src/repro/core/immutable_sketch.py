@@ -20,7 +20,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import bic
-from .bitio import BitWriter, np_peek_bits
+from .bitio import np_peek_bits, pack_bitmap_planes, pack_fixed_width
 from .csf import CompressedStaticFunction, build_csf
 from .hashing import np_seeded_hash32, scalar_seeded_hash32, token_fingerprint
 from .mphf import MPHF, build_mphf
@@ -120,12 +120,28 @@ class ImmutableSketch:
             arrs["planes"] = jnp.asarray(self.planes)
         return arrs
 
-    def probe_fingerprints_jnp(self, fps, arrs=None):
-        """jnp oracle of the device probe (mirrors probe_fingerprints_np)."""
+    def device_cache(self) -> dict:
+        """Memoized :meth:`device_arrays` — the per-segment device cache of
+        the batched query engine.  The flat sketch buffers are uploaded on
+        first use and reused by every later query wave in the process."""
+        arrs = getattr(self, "_device_cache_arrs", None)
+        if arrs is None:
+            arrs = self.device_arrays()
+            self._device_cache_arrs = arrs
+        return arrs
+
+    def probe_fingerprints_jnp(self, fps, arrs=None, *, use_kernel=False):
+        """jnp oracle of the device probe (mirrors probe_fingerprints_np).
+        ``use_kernel=True`` routes the MPHF lookup through the Pallas
+        ``sketch_probe`` kernel instead of the pure-jnp mirror."""
         if arrs is None:
             arrs = self.device_arrays()
         fps = fps.astype(jnp.uint32)
-        idx, absent = self.mphf.lookup_jnp(fps, arrs)
+        if use_kernel:
+            from ..kernels.sketch_probe.ops import mphf_probe
+            idx, absent = mphf_probe(self.mphf, fps, arrs=arrs)
+        else:
+            idx, absent = self.mphf.lookup_jnp(fps, arrs)
         idx = jnp.clip(idx, 0, max(self.n_tokens - 1, 0))
         bitpos = idx * self.sig_bits
         sig = _jnp_peek_fixed(arrs["signatures"], bitpos, self.sig_bits)
@@ -137,14 +153,15 @@ class ImmutableSketch:
         rank = jnp.where(present, self.csf.get_jnp(idx, csf_arrs), 0)
         return present, rank
 
-    def match_bitmap_jnp(self, fps, arrs=None):
+    def match_bitmap_jnp(self, fps, arrs=None, *, use_kernel=False):
         """(Q, W) u32 posting bitmaps per query fingerprint; absent tokens
         yield all-zero rows.  Requires bitmap planes."""
         if self.planes is None:
             raise ValueError("bitmap planes were not built for this sketch")
         if arrs is None:
             arrs = self.device_arrays()
-        present, rank = self.probe_fingerprints_jnp(fps, arrs)
+        present, rank = self.probe_fingerprints_jnp(fps, arrs,
+                                                    use_kernel=use_kernel)
         rows = arrs["planes"][jnp.clip(rank, 0, self.n_lists - 1)]
         return jnp.where(present[:, None], rows, jnp.uint32(0))
 
@@ -192,25 +209,18 @@ def build_immutable(content: SealedContent, *,
         & np.uint32((1 << sig_bits) - 1)
     sigs_mh = np.zeros(max(n_tokens, 1), dtype=np.uint32)
     sigs_mh[idx] = sigs_tok
-    w = BitWriter()
-    for s in sigs_mh[:max(n_tokens, 1)]:
-        w.write(int(s), sig_bits)
-    signatures = w.array()
+    signatures = pack_fixed_width(sigs_mh[:max(n_tokens, 1)], sig_bits)
 
     # 5. BIC-encode lists in rank order
     lists_by_rank = [content.lists[i] for i in order]
     bic_bits, bic_offsets, bic_counts = bic.encode_lists(
         lists_by_rank, content.n_postings)
 
-    # 6. optional device bitmap planes
+    # 6. optional device bitmap planes (vectorized scatter over all lists)
     planes = None
     words = (max(content.n_postings, 1) + 31) // 32
     if n_lists and n_lists * words * 4 <= plane_budget_bytes:
-        planes = np.zeros((n_lists, words), dtype=np.uint32)
-        for r, lst in enumerate(lists_by_rank):
-            lst = np.asarray(lst, dtype=np.int64)
-            np.bitwise_or.at(planes[r], lst >> 5,
-                             np.uint32(1) << (lst & 31).astype(np.uint32))
+        planes = pack_bitmap_planes(lists_by_rank, content.n_postings)
 
     stats = dict(content.stats)
     stats.update(n_tokens=n_tokens, n_lists=n_lists,

@@ -58,17 +58,37 @@ class SegmentWriter:
 
     def finish(self) -> ImmutableSketch:
         """Merge temporaries + live sketch into the final immutable sketch."""
-        parts = list(self.temporaries)
-        if self.sketch.stats.tokens:
-            parts.append(self.sketch.seal())
+        parts = self._all_parts()
         merged = merge_sealed(parts)
         return build_immutable(merged, sig_bits=self.sig_bits,
                                plane_budget_bytes=self.plane_budget)
 
+    def finish_segments(self) -> list[ImmutableSketch]:
+        """Multi-segment finish: every spill (plus the live sketch) becomes
+        its OWN immutable sketch — no monolithic merge.  Queries fan out
+        over the per-segment sketches and OR their per-token bitmaps
+        (core.query_engine.QueryEngine); posting ids stay global, so the
+        union of a token's per-segment posting sets equals the monolithic
+        posting set."""
+        return [build_immutable(p, sig_bits=self.sig_bits,
+                                plane_budget_bytes=self.plane_budget)
+                for p in self._all_parts()]
+
+    def _all_parts(self) -> list[SealedContent]:
+        parts = list(self.temporaries)
+        if self.sketch.stats.tokens:
+            parts.append(self.sketch.seal())
+        return parts
+
 
 def merge_sealed(parts: list[SealedContent]) -> SealedContent:
     """Union of (fingerprint, posting) pairs across temporary segments,
-    re-deduplicated — semantically the paper's merge-into-one-mutable-sketch."""
+    re-deduplicated — semantically the paper's merge-into-one-mutable-sketch.
+
+    Fully vectorized: instead of materializing one (fp, postings) chunk
+    pair per token (the old per-token ``np.full`` loop dominated
+    ``finish()`` for online-mode ingest), each part expands through
+    ``np.repeat`` over its per-token list lengths plus one flat gather."""
     if not parts:
         return SealedContent(fps=np.empty(0, np.uint32),
                              list_ids=np.empty(0, np.int64), lists=[],
@@ -76,12 +96,28 @@ def merge_sealed(parts: list[SealedContent]) -> SealedContent:
     fp_chunks, post_chunks = [], []
     stats: dict = {}
     for part in parts:
-        for tok_i in range(len(part.fps)):
-            lst = part.lists[int(part.list_ids[tok_i])]
-            fp_chunks.append(np.full(len(lst), part.fps[tok_i], np.uint32))
-            post_chunks.append(np.asarray(lst, np.int64))
+        if len(part.fps):
+            list_lens = np.asarray([len(l) for l in part.lists], np.int64)
+            flat = (np.concatenate([np.asarray(l, np.int64)
+                                    for l in part.lists])
+                    if list_lens.sum() else np.empty(0, np.int64))
+            offsets = np.concatenate([[0], np.cumsum(list_lens)])
+            tok_lens = list_lens[part.list_ids]
+            total = int(tok_lens.sum())
+            # flat indices: for token t, offsets[list_ids[t]] + [0..len)
+            ends = np.cumsum(tok_lens)
+            local = np.arange(total, dtype=np.int64) \
+                - np.repeat(ends - tok_lens, tok_lens)
+            gather = np.repeat(offsets[part.list_ids], tok_lens) + local
+            fp_chunks.append(np.repeat(part.fps, tok_lens))
+            post_chunks.append(flat[gather])
         for k, v in part.stats.items():
             if isinstance(v, (int, float)):
                 stats[k] = stats.get(k, 0) + v
+    if not fp_chunks:
+        return SealedContent(fps=np.empty(0, np.uint32),
+                             list_ids=np.empty(0, np.int64), lists=[],
+                             refcounts=np.empty(0, np.int64), n_postings=0,
+                             stats=stats)
     return build_sealed(np.concatenate(fp_chunks),
                         np.concatenate(post_chunks), stats)

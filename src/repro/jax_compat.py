@@ -1,0 +1,46 @@
+"""Compatibility shims for JAX APIs that moved between releases.
+
+The repo targets the modern spellings (``jax.set_mesh``, ``jax.shard_map``
+with ``check_vma``), but the pinned container ships an older JAX where the
+sharding context manager does not exist and ``shard_map`` lives under
+``jax.experimental`` with a required ``mesh`` argument and the ``check_rep``
+keyword.  Import these wrappers instead of calling ``jax.*`` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` when available, else a no-op context.  Call sites
+    pair this with the legacy ``with mesh:`` context, which older JAX uses
+    to resolve axis names."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext()
+
+
+def _context_mesh():
+    """The mesh installed by the enclosing legacy ``with mesh:`` block."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=False):
+    if hasattr(jax, "shard_map"):
+        kw = dict(in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None:
+        mesh = _context_mesh()
+    if mesh is None:
+        raise ValueError("shard_map needs a mesh: pass one explicitly or "
+                         "call inside a `with mesh:` block")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -15,7 +15,7 @@ Every kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle); tests
 sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
 """
-from .bitset_ops.ops import bitset_reduce
+from .bitset_ops.ops import bitset_reduce, bitset_reduce_batch
 from .csc_probe.ops import csc_partition_mask
 from .embedding_bag.ops import embedding_bag_sum
 from .flash_decode.ops import flash_decode
@@ -23,6 +23,6 @@ from .retrieval_score.ops import retrieval_scores, retrieval_topk
 from .sketch_probe.ops import mphf_probe
 from .token_hash.ops import token_fingerprints
 
-__all__ = ["bitset_reduce", "csc_partition_mask", "embedding_bag_sum",
-           "flash_decode", "mphf_probe", "retrieval_scores",
-           "retrieval_topk", "token_fingerprints"]
+__all__ = ["bitset_reduce", "bitset_reduce_batch", "csc_partition_mask",
+           "embedding_bag_sum", "flash_decode", "mphf_probe",
+           "retrieval_scores", "retrieval_topk", "token_fingerprints"]

@@ -33,6 +33,50 @@ def _bitset_kernel(planes_ref, out_ref, cnt_ref, *, op: str):
         jax.lax.population_count(combined)).astype(jnp.int32)
 
 
+DEFAULT_BLOCK_Q = 256
+
+
+def _bitset_batch_kernel(planes_ref, out_ref, cnt_ref, *, op: str):
+    tile = planes_ref[...]                      # (bq, T, bw) uint32
+    combined = tile[:, 0]
+    for t in range(1, tile.shape[1]):
+        combined = (combined & tile[:, t]) if op == "and" \
+            else (combined | tile[:, t])
+    out_ref[...] = combined
+    cnt_ref[...] = jnp.sum(jax.lax.population_count(combined),
+                           axis=-1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_q", "block_w",
+                                             "interpret"))
+def bitset_reduce_batch_pallas(planes, *, op: str = "and",
+                               block_q: int = DEFAULT_BLOCK_Q,
+                               block_w: int = DEFAULT_BLOCK_W,
+                               interpret: bool = True):
+    """planes (Q, T, W) uint32 -> (combined (Q, W) uint32, counts (Q,)).
+
+    The query-wave form of :func:`bitset_reduce_pallas`: grid over
+    (query-block, word-block); each step folds the T token planes of a
+    whole block of queries, so one dispatch evaluates the boolean
+    consumer of the entire wave."""
+    q, t, w = planes.shape
+    assert w % block_w == 0 and q % block_q == 0
+    grid = (q // block_q, w // block_w)
+    combined, counts = pl.pallas_call(
+        functools.partial(_bitset_batch_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_q, t, block_w),
+                               lambda qi, wi: (qi, 0, wi))],
+        out_specs=[pl.BlockSpec((block_q, block_w),
+                                lambda qi, wi: (qi, wi)),
+                   pl.BlockSpec((block_q, 1), lambda qi, wi: (qi, wi))],
+        out_shape=[jax.ShapeDtypeStruct((q, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((q, grid[1]), jnp.int32)],
+        interpret=interpret,
+    )(planes)
+    return combined, jnp.sum(counts, axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("op", "block_w", "interpret"))
 def bitset_reduce_pallas(planes, *, op: str = "and",
                          block_w: int = DEFAULT_BLOCK_W,

@@ -4,8 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_BLOCK_W, bitset_reduce_pallas
-from .ref import bitset_reduce_ref  # noqa: F401
+from .kernel import (DEFAULT_BLOCK_W, bitset_reduce_batch_pallas,
+                     bitset_reduce_pallas)
+from .ref import bitset_reduce_batch_ref, bitset_reduce_ref  # noqa: F401
 
 
 def _interpret() -> bool:
@@ -28,3 +29,31 @@ def bitset_reduce(planes, *, op: str = "and", block_w: int = DEFAULT_BLOCK_W):
         combined = combined[:w]
         count = count - (pad * 32 if op == "and" else 0)
     return combined, count
+
+
+def bitset_reduce_batch(planes, *, op: str = "and",
+                        block_w: int = DEFAULT_BLOCK_W):
+    """(Q, T, W) uint32 posting planes -> ((Q, W) combined, (Q,) counts).
+    Whole-wave form of :func:`bitset_reduce`: one kernel dispatch reduces
+    every query's token planes."""
+    from .kernel import DEFAULT_BLOCK_Q
+    q, t, w = planes.shape
+    block_w = min(block_w, max(128, w))
+    pad = (-w) % block_w
+    if pad:
+        fill = jnp.uint32(0xFFFFFFFF if op == "and" else 0)
+        planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)),
+                         constant_values=fill)
+    block_q = min(DEFAULT_BLOCK_Q, max(8, 1 << (q - 1).bit_length()))
+    pad_q = (-q) % block_q
+    if pad_q:
+        planes = jnp.pad(planes, ((0, pad_q), (0, 0), (0, 0)))
+    combined, counts = bitset_reduce_batch_pallas(
+        planes, op=op, block_q=block_q, block_w=block_w,
+        interpret=_interpret())
+    if pad_q:
+        combined, counts = combined[:q], counts[:q]
+    if pad:
+        combined = combined[:, :w]
+        counts = counts - (pad * 32 if op == "and" else 0)
+    return combined, counts

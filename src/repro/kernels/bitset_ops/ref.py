@@ -14,3 +14,14 @@ def bitset_reduce_ref(planes, *, op: str = "and"):
             combined = combined | planes[t]
     count = jnp.sum(jax.lax.population_count(combined)).astype(jnp.int32)
     return combined, count
+
+
+def bitset_reduce_batch_ref(planes, *, op: str = "and"):
+    """(Q, T, W) -> ((Q, W), (Q,)) batched oracle."""
+    combined = planes[:, 0]
+    for t in range(1, planes.shape[1]):
+        combined = (combined & planes[:, t]) if op == "and" \
+            else (combined | planes[:, t])
+    counts = jnp.sum(jax.lax.population_count(combined),
+                     axis=-1).astype(jnp.int32)
+    return combined, counts

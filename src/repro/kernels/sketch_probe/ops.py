@@ -13,25 +13,36 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def mphf_probe(mphf, fps, *, block_q: int = DEFAULT_BLOCK_Q):
+def mphf_probe(mphf, fps, *, block_q: int = DEFAULT_BLOCK_Q, arrs=None):
     """Batched minimal-perfect-hash probe of a built core.mphf.MPHF.
-    Returns (idx int32, absent bool) matching mphf.lookup_jnp."""
+    Returns (idx int32, absent bool) matching mphf.lookup_jnp.
+
+    ``arrs`` — an ``mphf.device_arrays()`` dict — lets callers reuse
+    already-uploaded device buffers (the QueryEngine per-segment cache);
+    without it the host arrays are re-wrapped per call."""
     fps = jnp.asarray(fps, jnp.uint32)
     q = fps.shape[0]
     block_q = min(block_q, max(8, 1 << (q - 1).bit_length()))
     pad = (-q) % block_q
     if pad:
         fps = jnp.pad(fps, (0, pad))
+    words = arrs["words"] if arrs is not None else jnp.asarray(mphf.words)
+    block_rank = (arrs["block_rank"] if arrs is not None
+                  else jnp.asarray(mphf.block_rank))
     idx, absent = sketch_probe_pallas(
-        fps, jnp.asarray(mphf.words), jnp.asarray(mphf.block_rank),
+        fps, words, block_rank,
         level_bits=tuple(int(x) for x in mphf.level_bits),
         level_word_offset=tuple(int(x) for x in mphf.level_word_offset),
         block_q=block_q, interpret=_interpret())
     idx, absent = idx[:q], absent[:q].astype(bool)
     # fallback keys (collided through every level) — tiny sorted array
     if mphf.fallback_fps.size:
-        fb_fps = jnp.asarray(mphf.fallback_fps)
-        fb_idx = jnp.asarray(mphf.fallback_idx.astype("int32"))
+        if arrs is not None:
+            fb_fps = arrs["fallback_fps"]
+            fb_idx = arrs["fallback_idx"]
+        else:
+            fb_fps = jnp.asarray(mphf.fallback_fps)
+            fb_idx = jnp.asarray(mphf.fallback_idx.astype("int32"))
         fpos = jnp.clip(jnp.searchsorted(fb_fps, fps[:q]), 0,
                         fb_fps.shape[0] - 1)
         fhit = (fb_fps[fpos] == fps[:q]) & absent

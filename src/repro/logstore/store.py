@@ -20,6 +20,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from collections import OrderedDict
+
 from ..baselines.bloom import BloomPerBatch
 from ..baselines.csc import CSCSketch
 from ..baselines.inverted import InvertedIndex
@@ -27,6 +29,7 @@ from ..core.batch_builder import build_sealed
 from ..core.hashing import token_fingerprint
 from ..core.immutable_sketch import build_immutable
 from ..core.query import query_and
+from ..core.query_engine import QueryEngine
 from ..core.segment import SegmentWriter
 from ..core.tokenizer import (contains_query_tokens, term_query_tokens,
                               tokenize_line)
@@ -68,7 +71,9 @@ class LogStoreBase:
     name = "base"
     uses_ngrams = True
 
-    def __init__(self, *, batch_lines: int = 512):
+    def __init__(self, *, batch_lines: int = 512,
+                 batch_cache_size: int = 128,
+                 ingest_cache_size: int = 2048):
         self.batch_lines = batch_lines
         self.blobs: list[bytes] = []
         self.batch_start: list[int] = [0]
@@ -76,6 +81,13 @@ class LogStoreBase:
         self._n_lines = 0
         self.stats = IngestStats()
         self._finished = False
+        # LRU of decompressed + lowercased batches (query post-filter)
+        self._batch_cache: OrderedDict[int, tuple] = OrderedDict()
+        self._batch_cache_cap = batch_cache_size
+        # LRU of per-line fingerprints (repeated log lines re-tokenize
+        # once; _index_line and the token stats share the same result)
+        self._fp_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._fp_cache_cap = ingest_cache_size
 
     # ------------------------------------------------------------------ ingest
     def ingest(self, lines) -> None:
@@ -123,6 +135,39 @@ class LogStoreBase:
     def candidates_contains(self, term: str) -> np.ndarray:
         return np.arange(len(self.blobs), dtype=np.int64)
 
+    # ---------------------------------------------------------------- caches
+    def _line_fingerprints(self, line: str, *, ngrams: bool) -> np.ndarray:
+        """Tokenize + fingerprint with a bounded LRU so duplicate log
+        lines (very common in real traffic) tokenize once; the token
+        count for the ingest stats rides along as ``len(fps)``."""
+        key = (line, ngrams)
+        fps = self._fp_cache.get(key)
+        if fps is not None:
+            self._fp_cache.move_to_end(key)
+            return fps
+        tokens = tokenize_line(line, ngrams=ngrams)
+        fps = np.fromiter((token_fingerprint(t) for t in tokens),
+                          dtype=np.uint32, count=len(tokens))
+        self._fp_cache[key] = fps
+        if len(self._fp_cache) > self._fp_cache_cap:
+            self._fp_cache.popitem(last=False)
+        return fps
+
+    def _batch_lower(self, b: int) -> tuple[list[str], list[str]]:
+        """(lines, lowercased lines) of batch ``b`` via a bounded LRU —
+        repeated queries stop re-decompressing + re-lowercasing every
+        candidate batch."""
+        hit = self._batch_cache.get(b)
+        if hit is not None:
+            self._batch_cache.move_to_end(b)
+            return hit
+        lines = decompress_batch(self.blobs[b])
+        entry = (lines, [ln.lower() for ln in lines])
+        self._batch_cache[b] = entry
+        if len(self._batch_cache) > self._batch_cache_cap:
+            self._batch_cache.popitem(last=False)
+        return entry
+
     # ------------------------------------------------------------------ query
     def _post_filter(self, candidates: np.ndarray, term: str,
                      mode: str) -> QueryResult:
@@ -130,11 +175,10 @@ class LogStoreBase:
         matches: list[int] = []
         true_batches = 0
         for b in candidates:
-            lines = decompress_batch(self.blobs[int(b)])
+            _, lowered = self._batch_lower(int(b))
             base = self.batch_start[int(b)]
             hit = False
-            for i, line in enumerate(lines):
-                low = line.lower()
+            for i, low in enumerate(lowered):
                 if term_l not in low:
                     continue
                 if mode == "contains" or self._term_in_line(term_l, low):
@@ -158,6 +202,15 @@ class LogStoreBase:
         return self._post_filter(self.candidates_contains(term), term,
                                  "contains")
 
+    # batch APIs: stores with a wave-capable index override
+    # candidates_term_batch; the default is the sequential host loop.
+    def candidates_term_batch(self, terms: list[str]) -> list[np.ndarray]:
+        return [self.candidates_term(t) for t in terms]
+
+    def query_term_batch(self, terms: list[str]) -> list[QueryResult]:
+        return [self._post_filter(c, t, "term")
+                for c, t in zip(self.candidates_term_batch(terms), terms)]
+
     @property
     def n_batches(self) -> int:
         return len(self.blobs)
@@ -172,58 +225,95 @@ class ScanStore(LogStoreBase):
 class DynaWarpStore(LogStoreBase):
     """The paper's sketch.  ``mode='batch'`` uses the TPU-idiomatic batch
     builder; ``mode='online'`` uses the faithful mutable sketch with
-    memory-bounded segmentation (§4.3)."""
+    memory-bounded segmentation (§4.3); ``mode='segmented'`` keeps every
+    spill as its own queryable immutable segment (no monolithic merge)
+    and fans queries out across them.
+
+    ``device_query=True`` (default) answers candidate queries through the
+    :class:`QueryEngine` — per-segment device caches + the Pallas
+    probe/bitset kernels for batched waves (``query_term_batch``), the
+    engine's LRU-cached scalar path for lone queries, and a host
+    fallback for plane-less segments.  ``device_query=False`` keeps the
+    paper's sequential host loop on the monolithic sketch."""
     name = "dynawarp"
 
     def __init__(self, *, batch_lines: int = 512, mode: str = "batch",
                  sig_bits: int = 8, memory_limit_bytes: int = 32 << 20,
-                 ngrams: bool = True):
+                 ngrams: bool = True, device_query: bool = True,
+                 plane_budget_bytes: int = 64 << 20):
         super().__init__(batch_lines=batch_lines)
+        if mode not in ("batch", "online", "segmented"):
+            raise ValueError(f"mode={mode!r}")
         self.mode = mode
         self.sig_bits = sig_bits
         self.uses_ngrams = ngrams
+        self.device_query = device_query or mode == "segmented"
+        self.plane_budget = plane_budget_bytes
         self.sketch = None
-        if mode == "online":
+        self.segments: list = []
+        self.engine: QueryEngine | None = None
+        if mode in ("online", "segmented"):
             self._writer = SegmentWriter(memory_limit_bytes=memory_limit_bytes,
-                                         sig_bits=sig_bits)
+                                         sig_bits=sig_bits,
+                                         plane_budget_bytes=plane_budget_bytes)
         else:
             self._fp_chunks: list[np.ndarray] = []
             self._post_chunks: list[np.ndarray] = []
 
     def _index_line(self, line: str, batch_id: int) -> None:
-        tokens = tokenize_line(line, ngrams=self.uses_ngrams)
-        self.stats.n_tokens_indexed += len(tokens)
-        fps = np.fromiter((token_fingerprint(t) for t in tokens),
-                          dtype=np.uint32, count=len(tokens))
-        if self.mode == "online":
+        fps = self._line_fingerprints(line, ngrams=self.uses_ngrams)
+        self.stats.n_tokens_indexed += len(fps)
+        if self.mode in ("online", "segmented"):
             self._writer.add_fingerprints(fps, batch_id)
         else:
             self._fp_chunks.append(fps)
             self._post_chunks.append(np.full(fps.shape, batch_id, np.int64))
 
     def _seal_index(self) -> None:
-        if self.mode == "online":
+        if self.mode == "segmented":
+            self.segments = self._writer.finish_segments()
+        elif self.mode == "online":
             self.sketch = self._writer.finish()
+            self.segments = [self.sketch]
         else:
             sealed = build_sealed(
                 np.concatenate(self._fp_chunks) if self._fp_chunks
                 else np.empty(0, np.uint32),
                 np.concatenate(self._post_chunks) if self._post_chunks
                 else np.empty(0, np.int64))
-            self.sketch = build_immutable(sealed, sig_bits=self.sig_bits)
+            self.sketch = build_immutable(sealed, sig_bits=self.sig_bits,
+                                          plane_budget_bytes=self.plane_budget)
             self._fp_chunks = self._post_chunks = None
+            self.segments = [self.sketch]
+        if self.device_query:
+            self.engine = QueryEngine(self.segments,
+                                      n_postings=len(self.blobs))
 
     def index_bytes(self) -> int:
+        if self.segments:
+            return sum(s.size_bytes() for s in self.segments)
         return self.sketch.size_bytes() if self.sketch else 0
 
+    def _candidates(self, tokens) -> np.ndarray:
+        if self.engine is not None:
+            return self.engine.query(tokens, op="and")
+        return query_and(self.sketch, tokens)
+
     def candidates_term(self, term: str) -> np.ndarray:
-        return query_and(self.sketch, term_query_tokens(term))
+        return self._candidates(term_query_tokens(term))
 
     def candidates_contains(self, term: str) -> np.ndarray:
         tokens = contains_query_tokens(term)
         if not tokens:
             return np.arange(len(self.blobs), dtype=np.int64)  # full scan
-        return query_and(self.sketch, tokens)
+        return self._candidates(tokens)
+
+    def candidates_term_batch(self, terms: list[str]) -> list[np.ndarray]:
+        """One engine wave answers the whole batch of term queries."""
+        if self.engine is None:
+            return super().candidates_term_batch(terms)
+        return self.engine.query_batch(
+            [term_query_tokens(t) for t in terms], op="and")
 
 
 class CscStore(LogStoreBase):
@@ -241,10 +331,8 @@ class CscStore(LogStoreBase):
         self.sketch: CSCSketch | None = None
 
     def _index_line(self, line: str, batch_id: int) -> None:
-        tokens = tokenize_line(line, ngrams=True)
-        self.stats.n_tokens_indexed += len(tokens)
-        fps = np.fromiter((token_fingerprint(t) for t in tokens),
-                          dtype=np.uint32, count=len(tokens))
+        fps = self._line_fingerprints(line, ngrams=True)
+        self.stats.n_tokens_indexed += len(fps)
         self._fp_chunks.append(fps)
         self._post_chunks.append(np.full(fps.shape, batch_id, np.int64))
 
@@ -335,10 +423,8 @@ class BloomStore(LogStoreBase):
         self.sketch: BloomPerBatch | None = None
 
     def _index_line(self, line: str, batch_id: int) -> None:
-        tokens = tokenize_line(line, ngrams=True)
-        self.stats.n_tokens_indexed += len(tokens)
-        fps = np.fromiter((token_fingerprint(t) for t in tokens),
-                          dtype=np.uint32, count=len(tokens))
+        fps = self._line_fingerprints(line, ngrams=True)
+        self.stats.n_tokens_indexed += len(fps)
         self._pending.setdefault(batch_id, []).append(fps)
 
     def _seal_index(self) -> None:

@@ -1,0 +1,140 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The seed container ships without hypothesis, which made the whole suite
+fail at collection.  Rather than skipping every property test, this
+module implements the tiny subset the tests use — ``given``, ``settings``
+and the ``binary`` / ``integers`` / ``lists`` / ``sets`` strategies — as a
+deterministic seeded sampler.  With the real hypothesis installed
+(see requirements-dev.txt) conftest.py never loads this module.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy is just `draw(rng) -> value` plus boundary examples."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def boundary(self):
+        return self._boundary
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.`` alias)."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundary=(min_value, max_value))
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return rng.integers(0, 256, n).astype(np.uint8).tobytes()
+        return _Strategy(draw, boundary=(b"\x00" * min_size,))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=32, unique=False):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            out, seen = [], set()
+            # bounded retry loop keeps uniqueness without hanging on tiny
+            # domains; give up after 50 misses and return what we have
+            misses = 0
+            while len(out) < n and misses < 50:
+                v = elements.draw(rng)
+                if unique and v in seen:
+                    misses += 1
+                    continue
+                seen.add(v)
+                out.append(v)
+            return out if len(out) >= min_size else out + [elements.draw(rng)
+                                                           for _ in range(min_size - len(out))]
+        return _Strategy(draw)
+
+    @staticmethod
+    def characters(min_codepoint=32, max_codepoint=126, **_kw):
+        return _Strategy(
+            lambda rng: chr(int(rng.integers(min_codepoint,
+                                             max_codepoint + 1))),
+            boundary=(chr(min_codepoint), chr(max_codepoint)))
+
+    @staticmethod
+    def text(alphabet=None, min_size=0, max_size=64):
+        if alphabet is None:
+            alphabet = strategies.characters()
+
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return "".join(alphabet.draw(rng) for _ in range(n))
+        return _Strategy(draw, boundary=("",) if min_size == 0 else ())
+
+    @staticmethod
+    def sets(elements, min_size=0, max_size=32):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            out = set()
+            misses = 0
+            while len(out) < n and misses < 200:
+                before = len(out)
+                out.add(elements.draw(rng))
+                misses += before == len(out)
+            return out
+        return _Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples",
+                             DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # crc32, not hash(): str hash is salted per process and would
+            # make "deterministic" draws unreproducible across runs
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            # boundary examples first (hypothesis-style shrink targets),
+            # then seeded random draws
+            boundaries = [s.boundary() for s in strats]
+            for combo in itertools.islice(itertools.product(
+                    *[b for b in boundaries if b]), 4):
+                if len(combo) == len(strats):
+                    fn(*args, *combo, **kwargs)
+            for _ in range(n_examples):
+                drawn = [s.draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # hide the strategy-bound (trailing) parameters from pytest's
+        # fixture resolution, like real hypothesis does
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco

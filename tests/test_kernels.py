@@ -7,10 +7,12 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (bitset_reduce, csc_partition_mask,
-                           embedding_bag_sum, mphf_probe, retrieval_scores,
+from repro.kernels import (bitset_reduce, bitset_reduce_batch,
+                           csc_partition_mask, embedding_bag_sum,
+                           mphf_probe, retrieval_scores,
                            token_fingerprints)
-from repro.kernels.bitset_ops.ref import bitset_reduce_ref
+from repro.kernels.bitset_ops.ref import (bitset_reduce_batch_ref,
+                                          bitset_reduce_ref)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.retrieval_score.ref import retrieval_score_ref
 from repro.kernels.token_hash.ref import token_hash_ref
@@ -36,6 +38,18 @@ def test_bitset_shapes(t, w, op, rng):
     cr, nr = bitset_reduce_ref(jnp.asarray(planes), op=op)
     np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
     assert int(n) == int(nr)
+
+
+@pytest.mark.parametrize("q,t,w,op", [(1, 1, 10, "and"), (4, 3, 700, "and"),
+                                      (8, 8, 513, "or"), (512, 1, 40, "and"),
+                                      (16, 2, 64, "or")])
+def test_bitset_batch_shapes(q, t, w, op, rng):
+    planes = rng.integers(0, 2**32, (q, t, w), dtype=np.uint64) \
+        .astype(np.uint32)
+    c, n = bitset_reduce_batch(jnp.asarray(planes), op=op)
+    cr, nr = bitset_reduce_batch_ref(jnp.asarray(planes), op=op)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(nr))
 
 
 @pytest.mark.parametrize("nkeys", [50, 1000, 20000])
@@ -79,7 +93,7 @@ def test_embedding_bag_sweep(v, d, b, bag, dtype, rng):
     got = embedding_bag_sum(jnp.asarray(table), jnp.asarray(idx))
     want = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-6)
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("c,d", [(256, 32), (5000, 64), (10000, 256)])
@@ -89,7 +103,7 @@ def test_retrieval_score_sweep(c, d, rng):
     got = retrieval_scores(jnp.asarray(corpus), jnp.asarray(q))
     want = retrieval_score_ref(jnp.asarray(corpus), jnp.asarray(q)[None])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=1e-5)
+                               rtol=2e-5, atol=1e-4)
 
 
 @given(st.integers(1, 300), st.integers(1, 12))
