@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: test bench example
+.PHONY: test bench bench-smoke example
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -8,6 +8,10 @@ test:
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+# fast CI gate: segmented columnar ingest + forced compaction vs scan
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.ingest_smoke
 
 example:
 	PYTHONPATH=$(PYTHONPATH) python examples/batched_query.py

@@ -1,0 +1,77 @@
+"""Ingest smoke (CI gate): a small corpus through the columnar
+segmented write path with compaction forced, checked against the scan
+baseline.
+
+Asserts the PR-2 invariants end to end — bit-identical query results
+through spill + tiered compaction, a bounded post-compaction segment
+count, a deterministically flushed partial tail batch — and prints one
+JSON object (same flat shape as the other benchmark tables).
+
+Run via ``make bench-smoke`` or ``python -m benchmarks.ingest_smoke``.
+"""
+import json
+import time
+
+import numpy as np
+
+from repro.logstore.datasets import (generate_dataset, id_queries,
+                                     present_id_queries)
+from repro.logstore.store import DynaWarpStore, ScanStore
+
+N_LINES = 3000  # 46 full batches + a partial 56-line tail at 64 lines/batch
+
+
+def main() -> dict:
+    ds = generate_dataset("smoke", n_lines=N_LINES, n_sources=24, seed=11)
+
+    dw = DynaWarpStore(batch_lines=64, mode="segmented",
+                       memory_limit_bytes=1 << 14, compact_fanout=2)
+    dw.request_compact()
+    t0 = time.perf_counter()
+    dw.ingest(ds.lines)
+    dw.finish()
+    build_s = time.perf_counter() - t0
+
+    scan = ScanStore(batch_lines=64)
+    scan.ingest(ds.lines)
+    scan.finish()
+
+    assert dw.n_batches == scan.n_batches == (N_LINES + 63) // 64, \
+        "partial tail batch must flush on finish()"
+    n_spills = dw._writer.n_spills
+    assert n_spills > 1, "smoke corpus must force spills"
+    bound = int(np.log2(max(n_spills, 2))) + 2
+    assert len(dw.segments) <= bound, \
+        f"{len(dw.segments)} segments > O(log n) bound {bound}"
+
+    queries = (present_id_queries(ds, 3, 8) + id_queries(5, 4)
+               + ["info", "gc", "connection"])
+    for t in queries:
+        truth = scan.query_term(t).matches
+        assert dw.query_term(t).matches == truth, t
+    batch = dw.query_term_batch(queries)
+    for t, r in zip(queries, batch):
+        assert r.matches == scan.query_term(t).matches, t
+
+    out = {
+        "ingest_smoke/lines": N_LINES,
+        "ingest_smoke/batches": dw.n_batches,
+        "ingest_smoke/spills": n_spills,
+        "ingest_smoke/segments": len(dw.segments),
+        "ingest_smoke/segment_bound": bound,
+        "ingest_smoke/writer_compactions": dw._writer.n_compactions,
+        "ingest_smoke/lines_per_s": round(
+            N_LINES / max(dw.stats.ingest_s, 1e-9)),
+        "ingest_smoke/build_s": round(build_s, 3),
+        "ingest_smoke/queries_checked": len(queries),
+    }
+    print(json.dumps(out, indent=2))
+    print("[smoke] OK: segmented ingest + forced compaction bit-identical "
+          f"to scan over {len(queries)} queries, "
+          f"{len(dw.segments)}/{n_spills} segments after tiering",
+          flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,38 @@
 """Fig. 4: ingest speed per store x dataset (tokenize+index+compress,
-sketch_finish, data_finish)."""
+sketch_finish, data_finish).
+
+The extra ``columnar_ingest`` rows time the write-path rework on the same
+DynaWarp store: the seed per-line loop (scalar fingerprints + per-token
+probing) against the columnar batch pipeline (vectorized
+tokenize -> fingerprint -> sort-based group sealing), in the same flat
+JSON shape as ``query_throughput.py``'s device_query rows."""
 from .common import DATASETS, build_store, load_dataset
+
+
+def _columnar_rows(ds_name: str, ds, table: dict):
+    from repro.logstore.store import DynaWarpStore
+
+    rows = {}
+    for label, columnar in (("line_loop", False), ("columnar", True)):
+        for mode in ("batch", "segmented"):
+            s = DynaWarpStore(batch_lines=64, mode=mode, columnar=columnar)
+            s.ingest(ds.lines)
+            s.finish()
+            st = s.stats
+            lps = round(ds.n_lines / max(st.ingest_s, 1e-9))
+            rows[f"{label}/{mode}"] = (lps, st.sketch_finish_s)
+            key = f"{ds_name}/columnar_ingest/{mode}/{label}"
+            table[f"{key}_lines_per_s"] = lps
+            table[f"{key}_seal_s"] = round(st.sketch_finish_s, 3)
+            print(f"[ingest] {ds_name:14s} columnar_ingest {mode:9s} "
+                  f"{label:9s} {lps:8d} lines/s  seal "
+                  f"{st.sketch_finish_s:5.2f}s", flush=True)
+    for mode in ("batch", "segmented"):
+        speedup = rows[f"columnar/{mode}"][0] / max(
+            rows[f"line_loop/{mode}"][0], 1e-9)
+        table[f"{ds_name}/columnar_ingest/{mode}/speedup"] = round(speedup, 2)
+        print(f"[ingest] {ds_name:14s} columnar_ingest {mode:9s} speedup "
+              f"{speedup:.1f}x", flush=True)
 
 
 def run(results: dict):
@@ -22,4 +54,5 @@ def run(results: dict):
                   f"{st.sketch_finish_s:5.2f}s "
                   f"({table[f'{ds_name}/{store_name}']['lines_per_s']}/s)",
                   flush=True)
+        _columnar_rows(ds_name, ds, table)
     results["ingest_speed"] = table

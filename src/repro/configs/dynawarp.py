@@ -8,6 +8,21 @@ These defaults mirror the reference implementation:
   * BBHash gamma 2.0 (construction-speed-optimal per [20])
   * 512-line compressed batches, zstd level 3, 32 MB mutable-sketch
     memory budget before internal segmentation (§4.3, §5.1.1)
+
+Beyond-paper write-path knobs (PR 2, columnar batch ingest).  Like the
+paper parameters above, these mirror the ``DynaWarpStore`` constructor
+defaults (same names) — the store takes them as constructor arguments,
+it does not read this dataclass:
+  * ``columnar`` — index whole flush batches through the vectorized
+    tokenize -> fingerprint -> sort-based-group pipeline (False restores
+    the per-line reference loop)
+  * ``compact_fanout`` — size-tiered compaction trigger: whenever this
+    many segments/temporaries share a power-of-two size tier they merge
+    into one, bounding query fan-out at O(log n) segments (<=1 disables)
+  * ``auto_compact`` — run the compactor automatically at ``finish()``
+    when the segment count exceeds ``compact_fanout``
+  * ``ingest_cache_size`` — bounded LRU of per-unique-line fingerprint
+    arrays (duplicate log lines tokenize once)
 """
 from dataclasses import dataclass
 
@@ -24,6 +39,11 @@ class DynaWarpConfig:
     zstd_level: int = 3
     memory_limit_bytes: int = 32 << 20
     ngrams: bool = True
+    # columnar ingest + compaction (logstore.store.DynaWarpStore)
+    columnar: bool = True
+    compact_fanout: int = 4
+    auto_compact: bool = True
+    ingest_cache_size: int = 2048
     # distributed probe layout (launch/dryrun exercises these)
     segments_axis: str = "data"      # segments shard over data (x pod)
     words_axis: str = "model"        # bitmap words shard over model
@@ -31,4 +51,4 @@ class DynaWarpConfig:
 
 CONFIG = DynaWarpConfig()
 SMOKE = DynaWarpConfig(name="dynawarp-smoke", batch_lines=32,
-                       memory_limit_bytes=1 << 14)
+                       memory_limit_bytes=1 << 14, compact_fanout=2)

@@ -128,6 +128,29 @@ def np_token_fingerprints(tokens_u8: np.ndarray, lengths: np.ndarray,
     return np_fmix32(h ^ lengths.astype(np.uint32))
 
 
+def np_window_fingerprints(mat: np.ndarray, lengths: np.ndarray, n: int,
+                           *, seed: int = POLY_SEED
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Fingerprints of every length-``n`` byte window of each row of a
+    packed (N, L) u8 token matrix — the vectorized n-gram hasher of the
+    columnar ingest path.  A window starting at column j of row i is valid
+    when ``j + n <= lengths[i]``; returns (row_idx, fps) over the valid
+    windows, bit-identical to ``token_fingerprint`` of each window's bytes.
+    """
+    N, L = mat.shape
+    W = L - n + 1
+    if N == 0 or W <= 0:
+        return np.empty(0, np.int64), np.empty(0, np.uint32)
+    h = np.full((N, W), seed, dtype=np.uint32)
+    for k in range(n):
+        h = (h * np.uint32(POLY_M32)) ^ mat[:, k:k + W].astype(np.uint32)
+    fps = np_fmix32(h ^ np.uint32(n))
+    valid = (np.arange(W, dtype=np.int64)[None, :] + n
+             <= lengths.astype(np.int64)[:, None])
+    rows = np.nonzero(valid)[0]
+    return rows, fps[valid]
+
+
 # --- jnp --------------------------------------------------------------------
 def jnp_fmix32(h):
     h = h.astype(jnp.uint32)

@@ -44,6 +44,10 @@ class ImmutableSketch:
     n_tokens: int
     planes: np.ndarray | None = None   # (L, ceil(P/32)) u32 device bitmaps
     stats: dict = field(default_factory=dict)
+    # Retained SealedContent (full fingerprints + lists) when the segment
+    # must stay mergeable by the cold-segment compactor; MPHFs alone are
+    # not mergeable.  Excluded from size accounting (host-side scratch).
+    sealed_source: SealedContent | None = None
 
     # ------------------------------------------------------------------ sizes
     @property
@@ -129,6 +133,11 @@ class ImmutableSketch:
             arrs = self.device_arrays()
             self._device_cache_arrs = arrs
         return arrs
+
+    def drop_device_cache(self) -> None:
+        """Invalidate the memoized device arrays (called on segments merged
+        away by compaction so their device buffers can be freed)."""
+        self._device_cache_arrs = None
 
     def probe_fingerprints_jnp(self, fps, arrs=None, *, use_kernel=False):
         """jnp oracle of the device probe (mirrors probe_fingerprints_np).

@@ -113,20 +113,22 @@ class MPHF:
         return 0, True
 
     def _rank_np(self, gbit: np.ndarray) -> np.ndarray:
+        """Rank of a set bit: sampled block rank + popcounts of the residual
+        words, fully vectorized — one (N, 8) gather + popcount for the words
+        before the target, one masked popcount for the partial word (the old
+        per-word loop paid 8 gathers and 16 popcount passes per batch)."""
+        gbit = np.asarray(gbit, dtype=np.int64)
         word = gbit >> 5
         block = word >> 3
-        r = self.block_rank[block].astype(np.int64)
         base = block << 3
-        for j in range(RANK_BLOCK_WORDS):
-            w = base + j
-            full = w < word
-            part = w == word
-            pc = _popcount32_np(self.words[np.minimum(w, self.words.size - 1)])
-            mask_pc = _popcount32_np(
-                self.words[np.minimum(w, self.words.size - 1)]
-                & ((np.uint32(1) << (gbit & 31).astype(np.uint32)) - np.uint32(1)))
-            r += np.where(full, pc, 0) + np.where(part, mask_pc, 0)
-        return r
+        cols = base[:, None] + np.arange(RANK_BLOCK_WORDS, dtype=np.int64)
+        pc = _popcount32_np(self.words[np.minimum(cols, self.words.size - 1)])
+        before = cols < word[:, None]
+        part = _popcount32_np(
+            self.words[word]
+            & ((np.uint32(1) << (gbit & 31).astype(np.uint32)) - np.uint32(1)))
+        return (self.block_rank[block].astype(np.int64)
+                + (pc * before).sum(axis=1) + part)
 
     # ---- jnp batch query -------------------------------------------------------
     def device_arrays(self) -> dict:

@@ -1,11 +1,21 @@
-"""Segmentation (§4.3): memory-bounded ingest with spill + merge.
+"""Segmentation (§4.3): memory-bounded ingest with spill + merge, plus the
+size-tiered compaction machinery that keeps segment fan-out bounded.
 
-A ``SegmentWriter`` feeds a mutable sketch; when its estimated memory
-exceeds ``memory_limit_bytes`` the sketch is sealed into a *temporary*
-segment (which — like the paper — keeps the full token fingerprints so a
-later merge is possible; MPHFs alone are not mergeable).  ``finish()``
-merges all temporaries plus the live sketch into one immutable sketch via
-the batch builder, equivalent to never having segmented.
+A ``SegmentWriter`` accepts columnar (fps, postings) batches — buffered as
+flat arrays and sealed with the vectorized batch builder on spill — and,
+for streamed scalar adds, still feeds the faithful mutable sketch, which
+has become the small cross-batch overflow structure.  When the estimated
+memory of the buffers + sketch exceeds ``memory_limit_bytes`` the live
+content is sealed into a *temporary* segment (which — like the paper —
+keeps the full token fingerprints so a later merge is possible; MPHFs
+alone are not mergeable).  Temporaries are size-tiered: whenever
+``compact_fanout`` temporaries land in the same power-of-two size tier
+they merge into one, so the number of live segments stays O(log n).
+
+``finish()`` merges all temporaries plus the live content into one
+immutable sketch via the batch builder, equivalent to never having
+segmented; ``finish_segments()`` instead builds one immutable sketch per
+temporary for the multi-segment query fan-out.
 """
 from __future__ import annotations
 
@@ -16,26 +26,62 @@ from .immutable_sketch import ImmutableSketch, build_immutable
 from .mutable_sketch import MutableSketch, SealedContent
 
 
+def _tier(size: int) -> int:
+    """Power-of-two size tier (LSM-style) of a segment size."""
+    return max(0, int(size)).bit_length()
+
+
+def tiered_merge(items: list, *, size_of, merge, fanout: int
+                 ) -> tuple[list, int]:
+    """Size-tiered compaction: while any power-of-two size tier holds
+    >= ``fanout`` items, merge that tier into one item (placed at the
+    position of its oldest member).  Returns (items, merge ops).  With N
+    inserts of bounded size the surviving item count is O(log N).
+    ``fanout <= 1`` disables compaction."""
+    if fanout <= 1:
+        return items, 0
+    n_merges = 0
+    while True:
+        tiers: dict[int, list[int]] = {}
+        for i, it in enumerate(items):
+            tiers.setdefault(_tier(size_of(it)), []).append(i)
+        crowded = [v for v in tiers.values() if len(v) >= fanout]
+        if not crowded:
+            return items, n_merges
+        idxs = set(crowded[0])
+        merged = merge([items[i] for i in sorted(idxs)])
+        items = [it for i, it in enumerate(items) if i not in idxs]
+        items.insert(min(min(idxs), len(items)), merged)
+        n_merges += 1
+
+
 class SegmentWriter:
     def __init__(self, *, memory_limit_bytes: int = 32 << 20,
                  short_list_threshold: int = 16,
                  sig_bits: int = 8,
-                 plane_budget_bytes: int = 64 << 20):
+                 plane_budget_bytes: int = 64 << 20,
+                 compact_fanout: int = 4):
         self.memory_limit = memory_limit_bytes
         self.threshold = short_list_threshold
         self.sig_bits = sig_bits
         self.plane_budget = plane_budget_bytes
+        self.compact_fanout = compact_fanout
         self.sketch = MutableSketch(short_list_threshold=short_list_threshold)
         self.temporaries: list[SealedContent] = []
+        self._col_fps: list[np.ndarray] = []
+        self._col_posts: list[np.ndarray] = []
+        self._col_bytes = 0
         self._adds_since_check = 0
         self.n_spills = 0
+        self.n_compactions = 0
 
+    # ------------------------------------------------------------- ingest
     def add_line(self, tokens, posting: int) -> None:
         self.sketch.add_line(tokens, posting)
         self._adds_since_check += len(tokens)
         if self._adds_since_check >= 4096:
             self._adds_since_check = 0
-            if self.sketch.memory_bytes() > self.memory_limit:
+            if self._memory_bytes() > self.memory_limit:
                 self.spill()
 
     def add_fingerprints(self, fps, posting: int) -> None:
@@ -44,41 +90,96 @@ class SegmentWriter:
         self._adds_since_check += len(fps)
         if self._adds_since_check >= 4096:
             self._adds_since_check = 0
-            if self.sketch.memory_bytes() > self.memory_limit:
+            if self._memory_bytes() > self.memory_limit:
                 self.spill()
 
-    def spill(self) -> None:
-        """Seal the live sketch into a temporary segment (full fingerprints
-        retained) and start a fresh mutable sketch."""
-        if self.sketch.stats.tokens == 0:
+    def add_fingerprint_batch(self, fps: np.ndarray,
+                              postings: np.ndarray) -> None:
+        """Columnar ingest: parallel (fp, posting) arrays are buffered as
+        flat chunks — no per-token probing — and sealed with the sort-based
+        batch builder on spill."""
+        fps = np.asarray(fps, dtype=np.uint32)
+        postings = np.asarray(postings, dtype=np.int64)
+        if fps.shape != postings.shape:
+            raise ValueError("fps and postings must be parallel 1-D arrays")
+        if fps.size == 0:
             return
-        self.temporaries.append(self.sketch.seal())
-        self.sketch = MutableSketch(short_list_threshold=self.threshold)
-        self.n_spills += 1
+        self._col_fps.append(fps)
+        self._col_posts.append(postings)
+        self._col_bytes += fps.nbytes + postings.nbytes
+        if self._memory_bytes() > self.memory_limit:
+            self.spill()
 
+    def _memory_bytes(self) -> int:
+        return self._col_bytes + self.sketch.memory_bytes()
+
+    # -------------------------------------------------------------- spill
+    def _live_part(self) -> SealedContent | None:
+        """Seal the live columnar buffers + overflow sketch (if any) into
+        one SealedContent, resetting the live state."""
+        parts: list[SealedContent] = []
+        if self._col_fps:
+            parts.append(build_sealed(np.concatenate(self._col_fps),
+                                      np.concatenate(self._col_posts)))
+            self._col_fps, self._col_posts = [], []
+            self._col_bytes = 0
+        if self.sketch.stats.tokens:
+            parts.append(self.sketch.seal())
+            self.sketch = MutableSketch(short_list_threshold=self.threshold)
+        if not parts:
+            return None
+        return parts[0] if len(parts) == 1 else merge_sealed(parts)
+
+    def spill(self) -> None:
+        """Seal the live content into a temporary segment (full
+        fingerprints retained), then size-tier-compact the temporaries."""
+        part = self._live_part()
+        if part is None:
+            return
+        self.temporaries.append(part)
+        self.n_spills += 1
+        self.temporaries, merges = tiered_merge(
+            self.temporaries, size_of=lambda p: len(p.fps),
+            merge=merge_sealed, fanout=self.compact_fanout)
+        self.n_compactions += merges
+
+    # ------------------------------------------------------------- finish
     def finish(self) -> ImmutableSketch:
-        """Merge temporaries + live sketch into the final immutable sketch."""
+        """Merge temporaries + live content into the final immutable
+        sketch."""
         parts = self._all_parts()
         merged = merge_sealed(parts)
         return build_immutable(merged, sig_bits=self.sig_bits,
                                plane_budget_bytes=self.plane_budget)
 
-    def finish_segments(self) -> list[ImmutableSketch]:
-        """Multi-segment finish: every spill (plus the live sketch) becomes
-        its OWN immutable sketch — no monolithic merge.  Queries fan out
-        over the per-segment sketches and OR their per-token bitmaps
-        (core.query_engine.QueryEngine); posting ids stay global, so the
-        union of a token's per-segment posting sets equals the monolithic
-        posting set."""
-        return [build_immutable(p, sig_bits=self.sig_bits,
-                                plane_budget_bytes=self.plane_budget)
-                for p in self._all_parts()]
+    def finish_segments(self, *, keep_sources: bool = True
+                        ) -> list[ImmutableSketch]:
+        """Multi-segment finish: every temporary (plus the live content)
+        becomes its OWN immutable sketch — no monolithic merge.  Queries
+        fan out over the per-segment sketches and OR their per-token
+        bitmaps (core.query_engine.QueryEngine); posting ids stay global,
+        so the union of a token's per-segment posting sets equals the
+        monolithic posting set.  ``keep_sources`` retains each segment's
+        SealedContent on ``sealed_source`` so cold segments stay mergeable
+        by the store-level compactor."""
+        segs = []
+        for p in self._all_parts():
+            sk = build_immutable(p, sig_bits=self.sig_bits,
+                                 plane_budget_bytes=self.plane_budget)
+            if keep_sources:
+                sk.sealed_source = p
+            segs.append(sk)
+        return segs
 
     def _all_parts(self) -> list[SealedContent]:
-        parts = list(self.temporaries)
-        if self.sketch.stats.tokens:
-            parts.append(self.sketch.seal())
-        return parts
+        """Seal any live content into the temporaries (not counted as a
+        spill, no tier merge) and return them.  Idempotent: a second
+        finish()/finish_segments() sees the identical parts instead of
+        silently dropping content buffered since the last spill."""
+        live = self._live_part()
+        if live is not None:
+            self.temporaries.append(live)
+        return list(self.temporaries)
 
 
 def merge_sealed(parts: list[SealedContent]) -> SealedContent:

@@ -36,6 +36,30 @@ def _ngrams(s: str, n: int) -> Iterable[str]:
     return (s[i:i + n] for i in range(len(s) - n + 1))
 
 
+def scan_line(lower: str):
+    """Rule 1-5 scan of one LOWERED line, shared by every tokenization
+    path: ``(alnum_runs, punct_runs, nonascii_runs, joined)`` where
+    ``joined`` holds the rule-4 separator pairs and rule-5 dot triples."""
+    spans = [(m.start(), m.end(), m.group()) for m in _ALNUM.finditer(lower)]
+    alnum = [t for _, _, t in spans]
+    punct = [m.group() for m in _PUNCT.finditer(lower)]
+    nonascii = [m.group() for m in _NONASCII.finditer(lower)]
+    joined: list[str] = []
+    # rule 4: pairs across a single separator char
+    for (s0, e0, _), (s1, e1, _) in zip(spans, spans[1:]):
+        if s1 - e0 == 1 and lower[e0] in _SEPARATORS:
+            joined.append(lower[s0:e1])
+    # rule 5: triples across single '.' chars
+    for i in range(len(spans) - 2):
+        s0, e0, _ = spans[i]
+        s1, e1, _ = spans[i + 1]
+        s2, e2, _ = spans[i + 2]
+        if s1 - e0 == 1 and lower[e0] == "." \
+                and s2 - e1 == 1 and lower[e1] == ".":
+            joined.append(lower[s0:e2])
+    return alnum, punct, nonascii, joined
+
+
 def tokenize_line(line: str, *, ngrams: bool = True) -> set[bytes]:
     """All indexed tokens for one log line.
 
@@ -44,40 +68,68 @@ def tokenize_line(line: str, *, ngrams: bool = True) -> set[bytes]:
     are not required).
     """
     out: set[str] = set()
-    lower = line.lower()
-
-    alnum_spans = [(m.start(), m.end(), m.group()) for m in _ALNUM.finditer(lower)]
+    alnum, punct, nonascii, joined = scan_line(line.lower())
     # rule 1 (+ rule 6)
-    for _, _, tok in alnum_spans:
+    for tok in alnum:
         out.add(tok)
         if ngrams:
             out.update(_ngrams(tok, 3))
     # rule 2 (+ rule 7)
-    for m in _PUNCT.finditer(lower):
-        tok = m.group()
+    for tok in punct:
         out.add(tok)
         if ngrams:
             out.update(_ngrams(tok, 1))
             out.update(_ngrams(tok, 2))
             out.update(_ngrams(tok, 3))
     # rule 3 (+ rule 8)
-    for m in _NONASCII.finditer(lower):
-        tok = m.group()
+    for tok in nonascii:
         out.add(tok)
         if ngrams:
             out.update(_ngrams(tok, 2))
-    # rule 4: pairs across a single separator char
-    for (s0, e0, t0), (s1, e1, t1) in zip(alnum_spans, alnum_spans[1:]):
-        if s1 - e0 == 1 and lower[e0] in _SEPARATORS:
-            out.add(lower[s0:e1])
-    # rule 5: triples across single '.' chars
-    for i in range(len(alnum_spans) - 2):
-        s0, e0, _ = alnum_spans[i]
-        s1, e1, _ = alnum_spans[i + 1]
-        s2, e2, _ = alnum_spans[i + 2]
-        if s1 - e0 == 1 and lower[e0] == "." and s2 - e1 == 1 and lower[e1] == ".":
-            out.add(lower[s0:e2])
+    out.update(joined)
     return {t.encode("utf-8")[:MAX_TOKEN_BYTES] for t in out}
+
+
+def tokenize_lines_columnar(lines, *, ngrams: bool = True):
+    """Columnar tokenization of a batch of lines for the vectorized ingest
+    pipeline.  Python only extracts the regex *runs* and the rule-4/5
+    joins; the n-gram explosion of rules 6/7 is deferred to the vectorized
+    byte-window hasher (``hashing.np_window_fingerprints``) over the
+    packed run matrices — no per-n-gram substring objects on the hot path.
+
+    Returns ``(tokens, tok_line, alnum_runs, alnum_line, punct_runs,
+    punct_line)``: rules 1-5 terms (plus the rare rule-8 char-level
+    n-grams of non-ASCII runs, expanded here because UTF-8 byte windows
+    differ from char windows) with their line ids, and the rule-6/7 run
+    byte strings with theirs.  Run lists are empty when ``ngrams=False``.
+    """
+    tokens: list[bytes] = []
+    tok_line: list[int] = []
+    alnum_runs: list[bytes] = []
+    alnum_line: list[int] = []
+    punct_runs: list[bytes] = []
+    punct_line: list[int] = []
+    for li, line in enumerate(lines):
+        n0 = len(tokens)
+        alnum, punct, nonascii, joined = scan_line(line.lower())
+        tokens.extend(t.encode() for t in alnum)
+        if ngrams and alnum:
+            alnum_runs.extend(t.encode() for t in alnum)
+            alnum_line.extend([li] * len(alnum))
+        for t in punct:
+            enc = t.encode()
+            tokens.append(enc)
+            if ngrams:
+                punct_runs.append(enc)
+                punct_line.append(li)
+        for t in nonascii:
+            tokens.append(t.encode("utf-8"))
+            if ngrams:
+                tokens.extend(g.encode("utf-8") for g in _ngrams(t, 2))
+        tokens.extend(t.encode() for t in joined)
+        tok_line.extend([li] * (len(tokens) - n0))
+    return (tokens, tok_line, alnum_runs, alnum_line, punct_runs,
+            punct_line)
 
 
 def term_query_tokens(term: str) -> list[bytes]:
@@ -119,4 +171,43 @@ def pack_tokens(tokens: list[bytes], max_len: int = MAX_TOKEN_BYTES
         t = t[:max_len]
         mat[i, :len(t)] = np.frombuffer(t, dtype=np.uint8)
         lengths[i] = len(t)
+    return mat, lengths
+
+
+def pack_slices(bu8: np.ndarray, starts: np.ndarray, lens: np.ndarray,
+                max_len: int | None = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Scatter (start, len) slices of a flat u8 buffer into a zero-padded
+    (N, L) matrix + length vector — the vectorized core of token packing
+    (no per-token byte objects)."""
+    n = len(starts)
+    L = max(int(lens.max()) if n else 1, 1)
+    if max_len is not None:
+        L = min(L, max_len)
+    cl = np.minimum(lens, L)
+    total = int(cl.sum())
+    rows = np.repeat(np.arange(n), cl)
+    ends = np.cumsum(cl)
+    local = np.arange(total, dtype=np.int64) - np.repeat(ends - cl, cl)
+    mat = np.zeros((n, L), dtype=np.uint8)
+    mat[rows, local] = bu8[np.repeat(starts, cl) + local]
+    return mat, cl.astype(np.int32)
+
+
+def pack_tokens_batch(tokens: list[bytes], max_len: int = MAX_TOKEN_BYTES
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized :func:`pack_tokens`: one ``b"".join`` + a single
+    :func:`pack_slices` scatter instead of a per-token python loop (the
+    columnar ingest path packs whole flush batches of tokens at once)."""
+    n = len(tokens)
+    if n == 0:
+        return np.zeros((0, max_len), np.uint8), np.zeros(0, np.int32)
+    flat = np.frombuffer(b"".join(tokens), dtype=np.uint8)
+    full = np.fromiter((len(t) for t in tokens), dtype=np.int64, count=n)
+    starts = np.concatenate([[0], np.cumsum(full[:-1])])
+    mat, lengths = pack_slices(flat, starts, full, max_len)
+    # pad the matrix to the requested width (fingerprint callers rely on
+    # the length vector, not the width, so this is shape-compat only)
+    if mat.shape[1] < max_len:
+        mat = np.pad(mat, ((0, 0), (0, max_len - mat.shape[1])))
     return mat, lengths

@@ -25,12 +25,12 @@ from collections import OrderedDict
 from ..baselines.bloom import BloomPerBatch
 from ..baselines.csc import CSCSketch
 from ..baselines.inverted import InvertedIndex
-from ..core.batch_builder import build_sealed
+from ..core.batch_builder import LineFingerprinter, build_sealed
 from ..core.hashing import token_fingerprint
 from ..core.immutable_sketch import build_immutable
 from ..core.query import query_and
 from ..core.query_engine import QueryEngine
-from ..core.segment import SegmentWriter
+from ..core.segment import SegmentWriter, merge_sealed, tiered_merge
 from ..core.tokenizer import (contains_query_tokens, term_query_tokens,
                               tokenize_line)
 from .compress import compress_batch, decompress_batch
@@ -95,13 +95,19 @@ class LogStoreBase:
         for line in lines:
             self._buf.append(line)
             self.stats.raw_bytes += len(line) + 1
-            self._index_line(line, len(self.blobs))
             self._n_lines += 1
             if len(self._buf) >= self.batch_lines:
                 self._flush_batch()
         self.stats.ingest_s += time.perf_counter() - t0
 
     def _flush_batch(self) -> None:
+        """Index + compress the buffered batch.  Indexing happens at flush
+        granularity so columnar stores see the whole batch at once; every
+        buffered line shares the flushed batch's posting id."""
+        self._index_batch(self._buf, len(self.blobs))
+        self._write_batch()
+
+    def _write_batch(self) -> None:
         blob = compress_batch(self._buf)
         self.blobs.append(blob)
         self.stats.data_bytes += len(blob)
@@ -109,9 +115,19 @@ class LogStoreBase:
         self._buf = []
 
     def finish(self) -> None:
+        if self._finished:   # idempotent: a second finish() must not
+            return           # rebuild (or empty) the sealed index
+        # deterministic flush of the partial tail batch: it is indexed and
+        # compressed exactly like a full batch, regardless of any pending
+        # compaction (the compactor only runs in _seal_index); its index
+        # cost stays in ingest_s, its compression in data_finish_s
+        if self._buf:
+            t0 = time.perf_counter()
+            self._index_batch(self._buf, len(self.blobs))
+            self.stats.ingest_s += time.perf_counter() - t0
         t0 = time.perf_counter()
         if self._buf:
-            self._flush_batch()
+            self._write_batch()
         self.stats.data_finish_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         self._seal_index()
@@ -120,6 +136,12 @@ class LogStoreBase:
         self._finished = True
 
     # hooks ---------------------------------------------------------------
+    def _index_batch(self, lines: list[str], batch_id: int) -> None:
+        """Index one flush batch; the default is the per-line seed loop,
+        columnar stores override with a vectorized whole-batch stage."""
+        for line in lines:
+            self._index_line(line, batch_id)
+
     def _index_line(self, line: str, batch_id: int) -> None:
         pass
 
@@ -229,6 +251,19 @@ class DynaWarpStore(LogStoreBase):
     spill as its own queryable immutable segment (no monolithic merge)
     and fans queries out across them.
 
+    ``columnar=True`` (default) indexes whole flush batches through the
+    vectorized tokenize -> fingerprint -> group pipeline
+    (:class:`~repro.core.batch_builder.LineFingerprinter` + sort-based
+    ``build_sealed``); ``columnar=False`` keeps the seed per-line loop
+    (scalar fingerprints + per-token sketch probing) for comparison.
+
+    Segmented mode bounds probe fan-out with size-tiered compaction:
+    during ingest the writer merges same-tier temporaries whenever
+    ``compact_fanout`` of them accumulate, and after ``finish()`` the
+    store's :meth:`compact` merges cold immutable segments the same way
+    (rebuilding the query engine; unchanged segments keep their device
+    caches, each merged segment re-uploads exactly once).
+
     ``device_query=True`` (default) answers candidate queries through the
     :class:`QueryEngine` — per-segment device caches + the Pallas
     probe/bitset kernels for batched waves (``query_term_batch``), the
@@ -240,8 +275,11 @@ class DynaWarpStore(LogStoreBase):
     def __init__(self, *, batch_lines: int = 512, mode: str = "batch",
                  sig_bits: int = 8, memory_limit_bytes: int = 32 << 20,
                  ngrams: bool = True, device_query: bool = True,
-                 plane_budget_bytes: int = 64 << 20):
-        super().__init__(batch_lines=batch_lines)
+                 plane_budget_bytes: int = 64 << 20,
+                 columnar: bool = True, compact_fanout: int = 4,
+                 auto_compact: bool = True, ingest_cache_size: int = 2048):
+        super().__init__(batch_lines=batch_lines,
+                         ingest_cache_size=ingest_cache_size)
         if mode not in ("batch", "online", "segmented"):
             raise ValueError(f"mode={mode!r}")
         self.mode = mode
@@ -249,16 +287,40 @@ class DynaWarpStore(LogStoreBase):
         self.uses_ngrams = ngrams
         self.device_query = device_query or mode == "segmented"
         self.plane_budget = plane_budget_bytes
+        self.columnar = columnar
+        self.compact_fanout = compact_fanout
+        self.auto_compact = auto_compact
+        self._compact_pending = False
         self.sketch = None
         self.segments: list = []
         self.engine: QueryEngine | None = None
+        if columnar:
+            self._fingerprinter = LineFingerprinter(
+                ngrams=ngrams, cache_size=self._fp_cache_cap)
         if mode in ("online", "segmented"):
             self._writer = SegmentWriter(memory_limit_bytes=memory_limit_bytes,
                                          sig_bits=sig_bits,
-                                         plane_budget_bytes=plane_budget_bytes)
+                                         plane_budget_bytes=plane_budget_bytes,
+                                         compact_fanout=compact_fanout)
         else:
             self._fp_chunks: list[np.ndarray] = []
             self._post_chunks: list[np.ndarray] = []
+
+    # ---------------------------------------------------------------- ingest
+    def _index_batch(self, lines: list[str], batch_id: int) -> None:
+        if not self.columnar:
+            super()._index_batch(lines, batch_id)
+            return
+        flat, counts = self._fingerprinter.fingerprint_lines(lines)
+        self.stats.n_tokens_indexed += int(counts.sum())
+        # one posting per flush batch: the batch's fingerprint set suffices
+        fps = np.unique(flat)
+        posts = np.full(fps.shape, batch_id, np.int64)
+        if self.mode in ("online", "segmented"):
+            self._writer.add_fingerprint_batch(fps, posts)
+        else:
+            self._fp_chunks.append(fps)
+            self._post_chunks.append(posts)
 
     def _index_line(self, line: str, batch_id: int) -> None:
         fps = self._line_fingerprints(line, ngrams=self.uses_ngrams)
@@ -288,6 +350,54 @@ class DynaWarpStore(LogStoreBase):
         if self.device_query:
             self.engine = QueryEngine(self.segments,
                                       n_postings=len(self.blobs))
+        if self.mode == "segmented" and (
+                self._compact_pending or
+                (self.auto_compact and len(self.segments) > self.compact_fanout)):
+            self.compact()
+
+    # ------------------------------------------------------------ compaction
+    def request_compact(self) -> None:
+        """Mark a compaction as pending; it runs at the next ``finish()``
+        (or immediately via :meth:`compact` once segments exist).  Pending
+        compactions never affect how the partial tail batch is flushed."""
+        self._compact_pending = True
+
+    def compact(self, *, fanout: int | None = None) -> int:
+        """Size-tiered merge of cold segments (mode='segmented'): whenever
+        ``fanout`` segments share a power-of-two size tier they merge into
+        one via ``merge_sealed`` on their retained sealed sources, bounding
+        query fan-out at O(log n) segments.  Returns the number of merge
+        ops.  The query engine is rebuilt over the surviving segments:
+        unchanged segments keep their uploaded device caches, merged-away
+        segments drop theirs, and each newly merged segment uploads exactly
+        once on its first wave."""
+        self._compact_pending = False
+        if len(self.segments) <= 1:
+            return 0
+        if any(s.sealed_source is None for s in self.segments):
+            raise ValueError("compaction requires segments built with "
+                             "retained sealed sources (mode='segmented')")
+        fanout = fanout or self.compact_fanout
+
+        def merge(group):
+            for s in group:
+                s.drop_device_cache()
+            part = merge_sealed([s.sealed_source for s in group])
+            sk = build_immutable(part, sig_bits=self.sig_bits,
+                                 plane_budget_bytes=self.plane_budget)
+            sk.sealed_source = part
+            return sk
+
+        self.segments, merges = tiered_merge(
+            self.segments, size_of=lambda s: s.size_bytes(),
+            merge=merge, fanout=fanout)
+        if merges:
+            if self.engine is not None:
+                self.engine = QueryEngine(self.segments,
+                                          n_postings=len(self.blobs))
+            if self._finished:
+                self.stats.index_bytes = self.index_bytes()
+        return merges
 
     def index_bytes(self) -> int:
         if self.segments:

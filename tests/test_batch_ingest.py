@@ -1,0 +1,226 @@
+"""Columnar batch ingest: vectorized tokenize -> fingerprint -> group
+sealing must be bit-identical to the seed per-line loop, and the partial
+tail batch must flush deterministically on finish() — compaction pending
+or not."""
+import numpy as np
+import pytest
+
+from repro.core.batch_builder import (LineFingerprinter, build_sealed,
+                                      fingerprint_lines_columnar,
+                                      fingerprint_tokens)
+from repro.core.hashing import token_fingerprint
+from repro.core.mutable_sketch import MutableSketch
+from repro.core.segment import SegmentWriter
+from repro.core.tokenizer import (MAX_TOKEN_BYTES, pack_tokens,
+                                  pack_tokens_batch, tokenize_line)
+from repro.logstore.store import DynaWarpStore, ScanStore
+
+TRICKY_LINES = [
+    "", "   ", "héllo wörld ütf8 ☃☃☃ test", "a.b.c x-y 1.2.3.4", "!@#$%",
+    "x" * 200, "Kelvin test", "a.b.c.d.e", "x-y_z/w@v:u", ".", "..",
+    "a..b", "a.b-c.d", "GET /api/v1/users/abcdef HTTP/1.1 200 123",
+    "\tmixed\twhite  space ",
+]
+
+
+# --------------------------------------------------------- token packing
+def test_pack_tokens_batch_matches_scalar():
+    toks = [b"hello", b"x", b"", b"a" * 100, bytes(range(200)), b"wor!d"]
+    m1, l1 = pack_tokens(toks)
+    m2, l2 = pack_tokens_batch(toks)
+    np.testing.assert_array_equal(m1, m2)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_fingerprint_tokens_matches_scalar():
+    toks = [b"hello", b"", b"a" * 100, b"1.2.3.4", bytes(range(256))]
+    got = fingerprint_tokens(toks)
+    want = np.asarray([token_fingerprint(t[:MAX_TOKEN_BYTES])
+                       for t in toks], np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------- line fingerprints
+@pytest.mark.parametrize("ngrams", [True, False])
+def test_line_fingerprinter_matches_tokenize_line(small_dataset, ngrams):
+    """Per-line unique fingerprints from the columnar pipeline (flat-blob
+    ASCII path + non-ASCII fallback) == the scalar tokenize + hash path."""
+    lines = small_dataset.lines[:300] + TRICKY_LINES
+    lf = LineFingerprinter(ngrams=ngrams)
+    flat, lens = lf.fingerprint_lines(lines)
+    off = 0
+    for ln, n in zip(lines, lens):
+        toks = tokenize_line(ln, ngrams=ngrams)
+        want = np.unique(np.fromiter(
+            (token_fingerprint(t) for t in toks), np.uint64,
+            len(toks)).astype(np.uint32))
+        np.testing.assert_array_equal(np.sort(flat[off:off + int(n)]),
+                                      want, err_msg=repr(ln))
+        off += int(n)
+    # cache hits return the identical arrays
+    flat2, lens2 = lf.fingerprint_lines(lines)
+    np.testing.assert_array_equal(flat, flat2)
+    np.testing.assert_array_equal(lens, lens2)
+
+
+def test_fingerprint_lines_columnar_tricky():
+    chunks = fingerprint_lines_columnar(TRICKY_LINES, ngrams=True)
+    assert len(chunks) == len(TRICKY_LINES)
+    for ln, chunk in zip(TRICKY_LINES, chunks):
+        toks = tokenize_line(ln, ngrams=True)
+        want = np.unique(np.fromiter(
+            (token_fingerprint(t) for t in toks), np.uint64,
+            len(toks)).astype(np.uint32))
+        np.testing.assert_array_equal(np.sort(chunk), want,
+                                      err_msg=repr(ln))
+
+
+# ------------------------------------------------- vectorized build_sealed
+def test_build_sealed_identical_to_online_sketch(rng):
+    """The lexsort-dedup step 4 must keep build_sealed's output identical
+    (fps, list ids, refcounts, list contents) to MutableSketch.seal()."""
+    for trial in range(4):
+        r = np.random.default_rng(trial)
+        fps = (r.integers(0, 200, 3000).astype(np.uint64)
+               * 2654435761 % (1 << 32)).astype(np.uint32)
+        posts = r.integers(0, 16, 3000).astype(np.int64)
+        sk = MutableSketch()
+        for f, p in zip(fps, posts):
+            sk.add_fingerprint(int(f), int(p))
+        a, b = sk.seal(), build_sealed(fps, posts)
+        np.testing.assert_array_equal(a.fps, b.fps)
+        np.testing.assert_array_equal(a.list_ids, b.list_ids)
+        np.testing.assert_array_equal(a.refcounts, b.refcounts)
+        assert a.canonical_lists() == b.canonical_lists()
+        assert a.n_postings == b.n_postings
+
+
+# --------------------------------------------------------- store columnar
+def test_columnar_store_matches_line_loop(small_dataset):
+    from repro.logstore.datasets import present_id_queries
+    scan = ScanStore(batch_lines=64)
+    col = DynaWarpStore(batch_lines=64, columnar=True)
+    loop = DynaWarpStore(batch_lines=64, columnar=False)
+    for s in (scan, col, loop):
+        s.ingest(small_dataset.lines)
+        s.finish()
+    queries = present_id_queries(small_dataset, 5, 6) + ["info", "gc"]
+    for t in queries:
+        truth = scan.query_term(t).matches
+        assert col.query_term(t).matches == truth, t
+        assert loop.query_term(t).matches == truth, t
+        sub = t[2:10]
+        assert (col.query_contains(sub).matches
+                == scan.query_contains(sub).matches), sub
+
+
+def test_columnar_segmented_writer_spills(small_dataset):
+    s = DynaWarpStore(batch_lines=64, mode="segmented",
+                      memory_limit_bytes=1 << 15)
+    s.ingest(small_dataset.lines)
+    assert s._writer.n_spills > 0
+    s.finish()
+    scan = ScanStore(batch_lines=64)
+    scan.ingest(small_dataset.lines)
+    scan.finish()
+    assert s.query_term("info").matches == scan.query_term("info").matches
+
+
+def test_segment_writer_columnar_equals_scalar(rng):
+    """add_fingerprint_batch (columnar buffers) and add_fingerprints
+    (scalar overflow sketch) seal to equivalent immutable sketches."""
+    fps = (rng.integers(0, 300, 4000).astype(np.uint64)
+           * 2654435761 % (1 << 32)).astype(np.uint32)
+    posts = rng.integers(0, 24, 4000).astype(np.int64)
+    a = SegmentWriter(memory_limit_bytes=1 << 13)
+    b = SegmentWriter(memory_limit_bytes=1 << 13)
+    for i in range(0, len(fps), 500):
+        a.add_fingerprint_batch(fps[i:i + 500], posts[i:i + 500])
+    for f, p in zip(fps, posts):
+        b.add_fingerprints(np.asarray([f], np.uint32), int(p))
+    sa, sb = a.finish(), b.finish()
+    for f in np.unique(fps)[:200]:
+        pa, ra = sa.probe_fingerprints_np(np.asarray([f], np.uint32))
+        pb, rb = sb.probe_fingerprints_np(np.asarray([f], np.uint32))
+        assert pa[0] and pb[0]
+        np.testing.assert_array_equal(sa.postings_for_rank(int(ra[0])),
+                                      sb.postings_for_rank(int(rb[0])))
+
+
+def test_segment_writer_finish_is_idempotent(rng):
+    """A second finish()/finish_segments() must see the identical content
+    — live buffers below the spill threshold are sealed into the
+    temporaries, not drained and dropped."""
+    fps = (rng.integers(0, 100, 500).astype(np.uint64)
+           * 2654435761 % (1 << 32)).astype(np.uint32)
+    posts = rng.integers(0, 8, 500).astype(np.int64)
+    w = SegmentWriter()  # large limit: nothing ever spills
+    w.add_fingerprint_batch(fps, posts)
+    a = w.finish()
+    assert a.n_tokens > 0
+    b = w.finish()
+    segs = w.finish_segments()
+    assert b.n_tokens == a.n_tokens
+    assert sum(s.n_tokens for s in segs) == a.n_tokens
+    f = int(np.unique(fps)[0])
+    pa, ra = a.probe_fingerprints_np(np.asarray([f], np.uint32))
+    pb, rb = b.probe_fingerprints_np(np.asarray([f], np.uint32))
+    assert pa[0] and pb[0]
+    np.testing.assert_array_equal(a.postings_for_rank(int(ra[0])),
+                                  b.postings_for_rank(int(rb[0])))
+
+
+def test_store_finish_is_idempotent(small_dataset):
+    """finish() twice must not rebuild (or empty) the sealed index in any
+    mode — batch mode used to lose everything on the second call."""
+    for mode in ("batch", "segmented"):
+        s = DynaWarpStore(batch_lines=64, mode=mode)
+        s.ingest(small_dataset.lines[:300])
+        s.finish()
+        want = s.query_term("info").matches
+        assert want
+        s.finish()
+        assert s.query_term("info").matches == want, mode
+
+
+def test_ngram_bucketing_handles_pathological_runs():
+    """One huge run must not break (or bloat) the batch: power-of-two
+    width buckets keep other runs packed narrow, results stay exact."""
+    lines = ["short a1b2 line", "x " + "a1b2" * 5000 + " y", "-" * 2000]
+    chunks = fingerprint_lines_columnar(lines, ngrams=True)
+    for ln, chunk in zip(lines, chunks):
+        toks = tokenize_line(ln, ngrams=True)
+        want = np.unique(np.fromiter(
+            (token_fingerprint(t) for t in toks), np.uint64,
+            len(toks)).astype(np.uint32))
+        np.testing.assert_array_equal(np.sort(chunk), want)
+
+
+# ----------------------------------------------------- partial tail flush
+def test_partial_batch_flushes_on_finish_with_pending_compaction(
+        small_dataset):
+    """Regression (ISSUE 2 satellite): finish() must index + flush the
+    partially filled tail batch deterministically even when a compaction
+    is pending."""
+    lines = small_dataset.lines[:100]  # 64-line batch + 36-line tail
+    scan = ScanStore(batch_lines=64)
+    scan.ingest(lines)
+    scan.finish()
+    stores = []
+    for _ in range(2):
+        s = DynaWarpStore(batch_lines=64, mode="segmented",
+                          memory_limit_bytes=1 << 15)
+        s.ingest(lines)
+        s.request_compact()
+        s.finish()
+        stores.append(s)
+    a, b = stores
+    assert a.n_batches == b.n_batches == 2
+    assert not a._compact_pending and not b._compact_pending
+    # deterministic: identical blobs, boundaries, and results
+    assert a.blobs == b.blobs
+    assert a.batch_start == b.batch_start
+    for t in ("info", "gc", "connection"):
+        truth = scan.query_term(t).matches
+        assert a.query_term(t).matches == truth, t
+        assert b.query_term(t).matches == truth, t

@@ -1,0 +1,140 @@
+"""Cold-segment compaction: size-tiered merging must keep query results
+bit-identical, bound segment fan-out at O(log n), and re-upload device
+caches exactly once per compacted segment."""
+import numpy as np
+import pytest
+
+from repro.core.immutable_sketch import ImmutableSketch
+from repro.core.segment import SegmentWriter, tiered_merge
+from repro.logstore.store import DynaWarpStore
+
+
+def _segmented_store(small_dataset, **kw):
+    kw.setdefault("batch_lines", 64)
+    kw.setdefault("mode", "segmented")
+    kw.setdefault("memory_limit_bytes", 1 << 14)
+    s = DynaWarpStore(**kw)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    return s
+
+
+# ------------------------------------------------------------ tiered merge
+def test_tiered_merge_bounds_item_count():
+    """N same-size inserts must converge to O(log N) surviving items."""
+    items: list = []
+    n = 64
+    for _ in range(n):
+        items.append(1)
+        items, _ = tiered_merge(items, size_of=lambda x: x,
+                                merge=lambda g: sum(g), fanout=2)
+    assert sum(items) == n
+    assert len(items) <= int(np.log2(n)) + 1
+
+    # fanout <= 1 disables compaction entirely
+    items, merges = tiered_merge([1] * 10, size_of=lambda x: x,
+                                 merge=lambda g: sum(g), fanout=1)
+    assert merges == 0 and len(items) == 10
+
+
+def test_writer_tiering_bounds_temporaries(rng):
+    fps = (rng.integers(0, 4000, 30000).astype(np.uint64)
+           * 2654435761 % (1 << 32)).astype(np.uint32)
+    posts = rng.integers(0, 64, 30000).astype(np.int64)
+    w = SegmentWriter(memory_limit_bytes=1 << 13, compact_fanout=2)
+    for i in range(0, len(fps), 250):
+        w.add_fingerprint_batch(fps[i:i + 250], posts[i:i + 250])
+    assert w.n_spills >= 8
+    assert w.n_compactions > 0
+    assert len(w.temporaries) <= int(np.log2(w.n_spills)) + 2
+
+
+# -------------------------------------------------------------- properties
+def test_compaction_query_results_bit_identical(small_dataset):
+    """Property (ISSUE 2 satellite): query_term and query_term_batch
+    results are bit-identical before and after compaction."""
+    from repro.logstore.datasets import id_queries, present_id_queries
+    s = _segmented_store(small_dataset, compact_fanout=16,
+                         auto_compact=False)
+    assert len(s.segments) > 2
+    terms = (present_id_queries(small_dataset, 5, 8) + id_queries(9, 4)
+             + ["info", "gc", "connection"])
+    before = [s.query_term(t).matches for t in terms]
+    before_batch = [r.matches for r in s.query_term_batch(terms)]
+    n_pre = len(s.segments)
+    merges = s.compact(fanout=2)
+    assert merges > 0
+    assert len(s.segments) < n_pre
+    after = [s.query_term(t).matches for t in terms]
+    after_batch = [r.matches for r in s.query_term_batch(terms)]
+    assert before == after
+    assert before_batch == after_batch
+    assert after == after_batch
+
+
+def test_compaction_bounds_segment_count(small_dataset):
+    """Forced compaction keeps segment count <= O(log n spills)."""
+    s = _segmented_store(small_dataset, compact_fanout=2)
+    n_spills = max(s._writer.n_spills, 2)
+    assert len(s.segments) <= int(np.log2(n_spills)) + 2
+
+
+def test_compacted_segments_reupload_exactly_once(small_dataset,
+                                                  monkeypatch):
+    """Device caches: unchanged segments keep their upload, each newly
+    merged segment uploads exactly once on the first post-compaction
+    wave."""
+    from repro.logstore.datasets import present_id_queries
+    s = _segmented_store(small_dataset, compact_fanout=16,
+                         auto_compact=False)
+    terms = present_id_queries(small_dataset, 5, 6)
+    s.query_term_batch(terms)  # upload every pre-compaction segment
+
+    calls = {"n": 0}
+    orig = ImmutableSketch.device_arrays
+
+    def counting(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(ImmutableSketch, "device_arrays", counting)
+    s.query_term_batch(terms)
+    assert calls["n"] == 0, "pre-compaction caches must be warm"
+
+    pre = {id(seg) for seg in s.segments}
+    s.compact(fanout=2)
+    n_new = sum(1 for seg in s.segments if id(seg) not in pre)
+    assert n_new > 0
+    s.query_term_batch(terms)
+    assert calls["n"] == n_new, "each merged segment uploads exactly once"
+    calls["n"] = 0
+    s.query_term_batch(terms)
+    assert calls["n"] == 0, "caches stay warm after the first wave"
+
+
+def test_compaction_requires_sealed_sources(small_dataset):
+    # single-segment stores no-op
+    s = DynaWarpStore(batch_lines=64, mode="batch")
+    s.ingest(small_dataset.lines[:200])
+    s.finish()
+    assert s.compact() == 0
+    # multi-segment stores must refuse when sources were dropped
+    m = _segmented_store(small_dataset, compact_fanout=16,
+                         auto_compact=False)
+    assert len(m.segments) > 1
+    for seg in m.segments:
+        seg.sealed_source = None
+    with pytest.raises(ValueError):
+        m.compact(fanout=2)
+
+
+def test_auto_compact_runs_at_finish(small_dataset):
+    """With auto_compact (default), finish() leaves no size tier holding
+    >= compact_fanout segments (the tiered-merge fixed point)."""
+    from repro.core.segment import _tier
+    s = _segmented_store(small_dataset, compact_fanout=2)
+    tiers: dict[int, int] = {}
+    for seg in s.segments:
+        t = _tier(seg.size_bytes())
+        tiers[t] = tiers.get(t, 0) + 1
+    assert all(n < 2 for n in tiers.values()), tiers
