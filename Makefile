@@ -1,10 +1,17 @@
 PYTHONPATH := src
+MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test bench bench-smoke example
+.PHONY: test test-distributed bench bench-smoke bench-smoke-sharded example
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# sharded retrieval on a forced 8-way host mesh (the tier-1 suite runs
+# the same tests on however many devices are visible — usually 1)
+test-distributed:
+	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_distributed.py
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
@@ -12,6 +19,10 @@ bench:
 # fast CI gate: segmented columnar ingest + forced compaction vs scan
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.ingest_smoke
+
+# fast CI gate: sharded retrieval over 8 host devices vs scan
+bench-smoke-sharded:
+	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sharded_smoke
 
 example:
 	PYTHONPATH=$(PYTHONPATH) python examples/batched_query.py

@@ -52,6 +52,46 @@ def _device_query_rows(ds_name: str, dw, table: dict):
           f"{eng_qps:10.2f} q/s  ({speedup:.1f}x)", flush=True)
 
 
+def _sharded_query_rows(ds_name: str, ds, table: dict):
+    """Segment fan-out through the sharded engine vs the single-device
+    engine on the SAME per-spill segments — 1 device gives architecture-
+    shape evidence; ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    measures the 8-way mesh."""
+    import jax
+    from repro.core.query_engine import QueryEngine
+    from repro.core.tokenizer import term_query_tokens
+    from repro.logstore.datasets import id_queries
+    from repro.logstore.store import DynaWarpStore
+
+    store = DynaWarpStore(batch_lines=64, mode="segmented",
+                          memory_limit_bytes=1 << 18,
+                          shard_axes=("data",))
+    store.ingest(ds.lines)
+    store.finish()
+    single = QueryEngine(store.segments, n_postings=store.n_batches)
+
+    wave = id_queries(31, 20) * 256             # 5120 term(ID) queries
+    token_lists = [term_query_tokens(t) for t in wave]
+    n_dev = len(jax.devices())
+
+    single_qps = _time_waves(
+        lambda: (single.query_batch(token_lists), len(wave))[1])
+    shard_qps = _time_waves(
+        lambda: (store.engine.query_batch(token_lists), len(wave))[1])
+    speedup = shard_qps / max(single_qps, 1e-9)
+    table[f"{ds_name}/sharded_query/devices"] = n_dev
+    table[f"{ds_name}/sharded_query/segments"] = len(store.segments)
+    table[f"{ds_name}/sharded_query/single_engine"] = round(single_qps, 2)
+    table[f"{ds_name}/sharded_query/sharded_engine"] = round(shard_qps, 2)
+    table[f"{ds_name}/sharded_query/sharded_speedup"] = round(speedup, 2)
+    print(f"[query] {ds_name:14s} {'sharded_query':16s} single    "
+          f"{single_qps:10.2f} q/s ({len(store.segments)} segments)",
+          flush=True)
+    print(f"[query] {ds_name:14s} {'sharded_query':16s} sharded   "
+          f"{shard_qps:10.2f} q/s  ({speedup:.1f}x on {n_dev} device(s))",
+          flush=True)
+
+
 def run(results: dict):
     table = {}
     for ds_name in DATASETS:
@@ -66,6 +106,7 @@ def run(results: dict):
                 print(f"[query] {ds_name:14s} {scen:16s} {sname:9s} "
                       f"{qps:10.2f} q/s", flush=True)
         _device_query_rows(ds_name, stores["dynawarp"], table)
+        _sharded_query_rows(ds_name, ds, table)
         # paper headline: needle-in-haystack speedup vs linear scan
         base = table[f"{ds_name}/term(ID)/scan"]
         for sname in ("dynawarp", "csc", "lucene"):

@@ -1,0 +1,92 @@
+"""Sharded-retrieval smoke (CI gate): a segmented corpus queried through
+the ShardedQueryEngine on whatever mesh is visible (CI forces 8 host
+devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``),
+checked bit-identically against the single-device engine and the scan
+baseline.
+
+Asserts the PR-3 invariants end to end — waves fan out over mesh shards
+through one shard_map per level-layout bucket, candidate extraction
+happens on device, per-shard segment buffers upload exactly once and
+survive compaction — and prints one JSON object (same flat shape as the
+other benchmark tables).
+
+Run via ``make bench-smoke-sharded`` or ``python -m benchmarks.sharded_smoke``.
+"""
+import json
+import time
+
+import numpy as np
+
+import jax
+
+from repro.logstore.datasets import (generate_dataset, id_queries,
+                                     present_id_queries)
+from repro.logstore.store import DynaWarpStore, ScanStore
+
+N_LINES = 3000
+
+
+def main() -> dict:
+    ds = generate_dataset("shardsmoke", n_lines=N_LINES, n_sources=24,
+                          seed=13)
+    n_dev = len(jax.devices())
+
+    dw = DynaWarpStore(batch_lines=64, mode="segmented",
+                       memory_limit_bytes=1 << 15, auto_compact=False,
+                       shard_axes=("data",))
+    plain = DynaWarpStore(batch_lines=64, mode="segmented",
+                          memory_limit_bytes=1 << 15, auto_compact=False)
+    scan = ScanStore(batch_lines=64)
+    for s in (dw, plain, scan):
+        s.ingest(ds.lines)
+        s.finish()
+
+    eng = dw.engine
+    assert type(eng).__name__ == "ShardedQueryEngine"
+    assert eng.n_shards == n_dev
+    assert eng._extract_on_device, "batched waves must extract on device"
+    assert len(dw.segments) > 1, "smoke corpus must spill into segments"
+
+    queries = (present_id_queries(ds, 3, 8) + id_queries(5, 4)
+               + ["info", "gc", "connection"])
+    wave = dw.query_term_batch(queries)          # compiles the buckets
+    for t, r, p in zip(queries, wave, plain.query_term_batch(queries)):
+        truth = scan.query_term(t).matches
+        assert r.matches == truth == p.matches, t
+    assert eng.upload_count == len(eng._plane_segs), \
+        "per-shard buffers must upload exactly once"
+
+    t0 = time.perf_counter()
+    waves = 0
+    while time.perf_counter() - t0 < 0.5:
+        dw.candidates_term_batch(queries)
+        waves += 1
+    qps = waves * len(queries) / (time.perf_counter() - t0)
+    assert eng.upload_count == len(eng._plane_segs), \
+        "repeated waves must not re-upload"
+
+    merges = dw.compact(fanout=2)
+    for t, r in zip(queries, dw.query_term_batch(queries)):
+        assert r.matches == scan.query_term(t).matches, t
+    assert merges > 0 and dw.engine.upload_count <= merges, \
+        "compaction must re-upload merged segments only"
+
+    out = {
+        "sharded_smoke/devices": n_dev,
+        "sharded_smoke/shards": eng.n_shards,
+        "sharded_smoke/segments_pre_compact": len(eng.segments),
+        "sharded_smoke/layout_buckets": len(eng._buckets),
+        "sharded_smoke/compaction_merges": merges,
+        "sharded_smoke/queries_checked": len(queries),
+        "sharded_smoke/sharded_q_per_s": round(qps, 2),
+    }
+    print(json.dumps(out, indent=2))
+    print(f"[smoke] OK: sharded retrieval over {n_dev} device(s) "
+          f"bit-identical to scan across {len(queries)} queries "
+          f"({qps:,.0f} q/s, uploads cached through compaction)",
+          flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()

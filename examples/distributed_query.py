@@ -1,41 +1,53 @@
-"""Distributed multi-segment query: S immutable segments (the Grail
-layout), stacked sketches probed in one batched call, with the Pallas
-probe kernel on the single-segment fast path.
+"""Sharded multi-segment retrieval: per-spill immutable segments (the
+Grail layout) assigned to mesh shards and probed through the
+ShardedQueryEngine — one shard_map wave per level-layout bucket, device
+candidate extraction, bit-identical to the single-device engine.
 
     PYTHONPATH=src python examples/distributed_query.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_query.py
 """
+import time
+
 import numpy as np
 
-import jax.numpy as jnp
+import jax
 
-from repro.core.distributed import StackedSketches, distributed_probe
-from repro.core.hashing import token_fingerprint
-from repro.core.mphf import build_mphf
-from repro.core.tokenizer import tokenize_line
-from repro.kernels import mphf_probe
-from repro.logstore.datasets import generate_dataset
+from repro.core.query_engine import QueryEngine
+from repro.core.tokenizer import term_query_tokens
+from repro.logstore.datasets import generate_dataset, present_id_queries
+from repro.logstore.store import DynaWarpStore
 
-# build 8 segments of 2.5k lines each
-segments, keysets = [], []
-for s in range(8):
-    ds = generate_dataset(f"seg{s}", n_lines=2500, n_sources=8, seed=s)
-    fps = set()
-    for line in ds.lines:
-        fps |= {token_fingerprint(t) for t in tokenize_line(line)}
-    keys = np.asarray(sorted(fps), np.uint32)
-    segments.append(build_mphf(keys))
-    keysets.append(keys)
+ds = generate_dataset("sharded", n_lines=20000, n_sources=32, seed=5)
 
-stacked = StackedSketches.stack(segments)
-query = keysets[3][:256]                      # tokens known to be in seg 3
+store = DynaWarpStore(batch_lines=128, mode="segmented",
+                      memory_limit_bytes=1 << 19, shard_axes=("data",))
+store.ingest(ds.lines)
+store.finish()
+eng = store.engine
+print(f"{len(store.segments)} segments -> {len(eng._buckets)} layout "
+      f"bucket(s) over {eng.n_shards} shard(s) "
+      f"({len(jax.devices())} devices); "
+      f"{eng.upload_count} per-shard buffer uploads pending first wave")
 
-idx, absent = distributed_probe(stacked, query)
-hits = (~np.asarray(absent)).sum(axis=1)
-print(f"probed {len(query)} tokens x {stacked.n_segments} segments; "
-      f"per-segment MPHF hits: {hits.tolist()}")
+wave = present_id_queries(ds, 7, 16) * 40       # 640 term queries
+single = QueryEngine(store.segments, n_postings=store.n_batches)
 
-# Pallas kernel fast path on one segment
-ki, ka = mphf_probe(segments[3], query)
-assert not np.asarray(ka).any()
-print(f"Pallas probe: all {len(query)} tokens resolved in segment 3 "
-      f"(minimal hashes {np.asarray(ki)[:5].tolist()}...)")
+res_sharded = store.query_term_batch(wave)      # warm the jit buckets
+res_single = single.query_batch([term_query_tokens(t) for t in wave])
+
+t0 = time.perf_counter()
+store.candidates_term_batch(wave)
+t_shard = time.perf_counter() - t0
+print(f"sharded wave   : {len(wave) / t_shard:10.0f} q/s "
+      f"({eng.upload_count} uploads total — each segment uploaded once)")
+
+for r, ids in zip(res_sharded, res_single):
+    np.testing.assert_array_equal(np.sort(r.candidate_batches), np.sort(ids))
+print("sharded candidates bit-identical to the single-device engine")
+
+# compaction keeps the sharding: unchanged segments keep their buffers
+merges = store.compact(fanout=2)
+store.query_term_batch(wave[:8])
+print(f"compacted ({merges} merges): engine rebuilt shard-aware, "
+      f"{store.engine.upload_count} new uploads (merged segments only)")

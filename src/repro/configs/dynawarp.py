@@ -23,6 +23,25 @@ it does not read this dataclass:
     when the segment count exceeds ``compact_fanout``
   * ``ingest_cache_size`` — bounded LRU of per-unique-line fingerprint
     arrays (duplicate log lines tokenize once)
+
+Beyond-paper read-path knobs (PR 3, sharded device retrieval), also
+``DynaWarpStore`` constructor arguments:
+  * ``shard_axes`` — ``None`` keeps the single-device ``QueryEngine``;
+    a mesh-axis tuple (``('data',)``, or ``('pod', 'data')`` for the
+    multi-pod production mesh) routes batched waves through the
+    ``ShardedQueryEngine``: whole segments are assigned to mesh shards
+    over every visible device, each shard probes its local segments
+    via ``shard_map`` with the same Pallas ``sketch_probe``/
+    ``bitset_ops`` path, and per-shard partial bitmaps OR together —
+    bit-identical to the single-device engine.  Per-shard segment
+    buffers upload once and survive compaction rebuilds.
+  * ``extract_on_device`` — where hit bitmaps become posting ids.
+    ``None``/``True`` (default): on device through the
+    ``bitmap_extract`` compaction — only a (Q, max_hits) id tensor
+    crosses to host per wave.  ``False``: host-side decode through an
+    LRU of flatnonzero-decoded bitmap rows (no ``np.unpackbits`` bit
+    matrices on either path).  Lone queries always take the scalar
+    host path and never materialize bitmaps at all.
 """
 from dataclasses import dataclass
 
@@ -44,6 +63,9 @@ class DynaWarpConfig:
     compact_fanout: int = 4
     auto_compact: bool = True
     ingest_cache_size: int = 2048
+    # sharded device retrieval (logstore.store.DynaWarpStore PR 3)
+    shard_axes: tuple | None = None  # e.g. ("data",) / ("pod", "data")
+    extract_on_device: bool | None = None
     # distributed probe layout (launch/dryrun exercises these)
     segments_axis: str = "data"      # segments shard over data (x pod)
     words_axis: str = "model"        # bitmap words shard over model

@@ -73,27 +73,38 @@ class CompressedStaticFunction:
 
     # ---- device decode -----------------------------------------------------------
     def device_arrays(self) -> dict:
+        # n1 rides along so stacked/sharded probes can pass the clip bound
+        # as data (one traced decode body shared by every segment layout)
         return dict(bitseq=jnp.asarray(self.bitseq),
                     lengths=jnp.asarray(self.lengths),
-                    samples=jnp.asarray(self.samples.astype(np.int32)))
+                    samples=jnp.asarray(self.samples.astype(np.int32)),
+                    n1=jnp.asarray(max(self.n - 1, 0), jnp.int32))
 
     def get_jnp(self, idx, arrs=None):
         if arrs is None:
             arrs = self.device_arrays()
-        bitseq, lengths, samples = arrs["bitseq"], arrs["lengths"], arrs["samples"]
-        idx = idx.astype(jnp.int32)
-        block = idx // SAMPLE
-        base = block * SAMPLE
-        off = samples[block]
-        rel = idx - base
-        nbits = jnp.zeros(idx.shape, dtype=jnp.int32)
-        for j in range(SAMPLE):
-            lj = _jnp_peek(lengths,
-                           jnp.minimum(base + j, self.n - 1) * LEN_BITS,
-                           LEN_BITS).astype(jnp.int32)
-            off = off + jnp.where(j < rel, lj, 0)
-            nbits = jnp.where(j == rel, lj, nbits)
-        return _jnp_peek_var(bitseq, off, nbits).astype(jnp.int32)
+        return csf_get_jnp(idx, arrs)
+
+
+def csf_get_jnp(idx, arrs):
+    """Decode ``idx`` against a :meth:`CompressedStaticFunction.device_arrays`
+    dict.  All bounds come from ``arrs`` (``n1`` = n - 1), so the same
+    traced body serves a single sketch and a stacked per-shard row."""
+    bitseq, lengths, samples = arrs["bitseq"], arrs["lengths"], arrs["samples"]
+    n1 = arrs["n1"]
+    idx = idx.astype(jnp.int32)
+    block = idx // SAMPLE
+    base = block * SAMPLE
+    off = samples[block]
+    rel = idx - base
+    nbits = jnp.zeros(idx.shape, dtype=jnp.int32)
+    for j in range(SAMPLE):
+        lj = _jnp_peek(lengths,
+                       jnp.minimum(base + j, n1) * LEN_BITS,
+                       LEN_BITS).astype(jnp.int32)
+        off = off + jnp.where(j < rel, lj, 0)
+        nbits = jnp.where(j == rel, lj, nbits)
+    return _jnp_peek_var(bitseq, off, nbits).astype(jnp.int32)
 
 
 def _jnp_peek(words, bitpos, nbits: int):

@@ -120,8 +120,13 @@ class ImmutableSketch:
         arrs = dict(self.mphf.device_arrays())
         arrs.update({f"csf_{k}": v for k, v in self.csf.device_arrays().items()})
         arrs["signatures"] = jnp.asarray(self.signatures)
+        # dynamic clip bounds: the probe body reads them from the dict, so
+        # one traced graph serves this sketch and any padded stacked row
+        arrs["n_tokens1"] = jnp.asarray(max(self.n_tokens - 1, 0), jnp.int32)
         if self.planes is not None:
             arrs["planes"] = jnp.asarray(self.planes)
+            arrs["n_lists1"] = jnp.asarray(max(self.n_lists - 1, 0),
+                                           jnp.int32)
         return arrs
 
     def device_cache(self) -> dict:
@@ -134,10 +139,36 @@ class ImmutableSketch:
             self._device_cache_arrs = arrs
         return arrs
 
+    def device_row_cache(self, key, device, build) -> tuple[dict, bool]:
+        """Per-(layout, device) memo of this segment's padded shard row —
+        the sharded-engine counterpart of :meth:`device_cache`.  ``build``
+        returns the padded HOST arrays; they are uploaded to ``device``
+        on first use and reused by every later wave AND by every engine
+        rebuild (compaction keeps unchanged segments' shard buffers).
+        Returns (arrays, uploaded_now)."""
+        import jax
+        cache = getattr(self, "_device_row_caches", None)
+        if cache is None:
+            cache = self._device_row_caches = {}
+        k = (key, getattr(device, "id", device))
+        arrs = cache.get(k)
+        if arrs is not None:
+            return arrs, False
+        arrs = {name: jax.device_put(v, device)
+                for name, v in build().items()}
+        cache[k] = arrs
+        return arrs, True
+
     def drop_device_cache(self) -> None:
         """Invalidate the memoized device arrays (called on segments merged
         away by compaction so their device buffers can be freed)."""
         self._device_cache_arrs = None
+        self._device_row_caches = None
+
+    def _level_layout(self) -> tuple[tuple, tuple]:
+        """Static MPHF level metadata — the shard/layout bucket key."""
+        return (tuple(int(x) for x in self.mphf.level_bits),
+                tuple(int(x) for x in self.mphf.level_word_offset))
 
     def probe_fingerprints_jnp(self, fps, arrs=None, *, use_kernel=False):
         """jnp oracle of the device probe (mirrors probe_fingerprints_np).
@@ -147,20 +178,12 @@ class ImmutableSketch:
             arrs = self.device_arrays()
         fps = fps.astype(jnp.uint32)
         if use_kernel:
-            from ..kernels.sketch_probe.ops import mphf_probe
-            idx, absent = mphf_probe(self.mphf, fps, arrs=arrs)
-        else:
-            idx, absent = self.mphf.lookup_jnp(fps, arrs)
-        idx = jnp.clip(idx, 0, max(self.n_tokens - 1, 0))
-        bitpos = idx * self.sig_bits
-        sig = _jnp_peek_fixed(arrs["signatures"], bitpos, self.sig_bits)
-        from .hashing import seeded_hash32
-        want = seeded_hash32(fps, SIG_SEED) & jnp.uint32((1 << self.sig_bits) - 1)
-        present = (~absent) & (sig == want)
-        csf_arrs = {k[len("csf_"):]: v for k, v in arrs.items()
-                    if k.startswith("csf_")}
-        rank = jnp.where(present, self.csf.get_jnp(idx, csf_arrs), 0)
-        return present, rank
+            lb, lo = self._level_layout()
+            return probe_tokens_from(fps, arrs, level_bits=lb,
+                                     level_word_offset=lo,
+                                     sig_bits=self.sig_bits)
+        idx, absent = self.mphf.lookup_jnp(fps, arrs)
+        return _resolve_probe(fps, idx, absent, arrs, self.sig_bits)
 
     def match_bitmap_jnp(self, fps, arrs=None, *, use_kernel=False):
         """(Q, W) u32 posting bitmaps per query fingerprint; absent tokens
@@ -169,10 +192,57 @@ class ImmutableSketch:
             raise ValueError("bitmap planes were not built for this sketch")
         if arrs is None:
             arrs = self.device_arrays()
+        if use_kernel:
+            lb, lo = self._level_layout()
+            return match_bitmap_from(fps, arrs, level_bits=lb,
+                                     level_word_offset=lo,
+                                     sig_bits=self.sig_bits)
         present, rank = self.probe_fingerprints_jnp(fps, arrs,
-                                                    use_kernel=use_kernel)
-        rows = arrs["planes"][jnp.clip(rank, 0, self.n_lists - 1)]
+                                                    use_kernel=False)
+        rows = arrs["planes"][jnp.clip(rank, 0, arrs["n_lists1"])]
         return jnp.where(present[:, None], rows, jnp.uint32(0))
+
+
+def _resolve_probe(fps, idx, absent, arrs, sig_bits: int):
+    """Minimal-hash -> (present, rank): signature check + CSF decode.
+    Every bound is data (``n_tokens1``, ``csf_n1``), so the traced body is
+    layout-independent past the MPHF lookup."""
+    from .hashing import seeded_hash32
+    idx = jnp.clip(idx, 0, arrs["n_tokens1"])
+    bitpos = idx * sig_bits
+    sig = _jnp_peek_fixed(arrs["signatures"], bitpos, sig_bits)
+    want = seeded_hash32(fps, SIG_SEED) & jnp.uint32((1 << sig_bits) - 1)
+    present = (~absent) & (sig == want)
+    csf_arrs = {k[len("csf_"):]: v for k, v in arrs.items()
+                if k.startswith("csf_")}
+    from .csf import csf_get_jnp
+    rank = jnp.where(present, csf_get_jnp(idx, csf_arrs), 0)
+    return present, rank
+
+
+def probe_tokens_from(fps, arrs, *, level_bits: tuple,
+                      level_word_offset: tuple, sig_bits: int):
+    """THE device probe code path (Pallas MPHF kernel + signature check +
+    CSF rank), parameterized by an ``ImmutableSketch.device_arrays`` dict.
+    The single-device engine passes a segment's own arrays; the sharded
+    engine passes a zero-padded row sliced from a stacked per-shard buffer
+    — both produce bit-identical (present, rank)."""
+    from ..kernels.sketch_probe.ops import mphf_probe_arrs
+    fps = fps.astype(jnp.uint32)
+    idx, absent = mphf_probe_arrs(fps, arrs, level_bits=level_bits,
+                                  level_word_offset=level_word_offset)
+    return _resolve_probe(fps, idx, absent, arrs, sig_bits)
+
+
+def match_bitmap_from(fps, arrs, *, level_bits: tuple,
+                      level_word_offset: tuple, sig_bits: int):
+    """(Q, W) u32 posting bitmaps via :func:`probe_tokens_from` + plane
+    gather; absent tokens (and all-zero padded rows) yield zero rows."""
+    present, rank = probe_tokens_from(fps, arrs, level_bits=level_bits,
+                                      level_word_offset=level_word_offset,
+                                      sig_bits=sig_bits)
+    rows = arrs["planes"][jnp.clip(rank, 0, arrs["n_lists1"])]
+    return jnp.where(present[:, None], rows, jnp.uint32(0))
 
 
 def _jnp_peek_fixed(words, bitpos, nbits: int):

@@ -132,6 +132,10 @@ class MPHF:
 
     # ---- jnp batch query -------------------------------------------------------
     def device_arrays(self) -> dict:
+        # fb_count makes the fallback resolution data-driven (one traced
+        # body whether or not this MPHF has fallback keys); the empty pad
+        # is 0xFFFFFFFF so padded fallback arrays stay sorted when stacked
+        # segments pad to a common length.
         return dict(
             words=jnp.asarray(self.words),
             block_rank=jnp.asarray(self.block_rank),
@@ -139,10 +143,11 @@ class MPHF:
             level_bits=jnp.asarray(self.level_bits),
             fallback_fps=jnp.asarray(
                 self.fallback_fps if self.fallback_fps.size else
-                np.zeros(1, np.uint32)),
+                np.full(1, 0xFFFFFFFF, np.uint32)),
             fallback_idx=jnp.asarray(
                 (self.fallback_idx if self.fallback_idx.size else
                  np.zeros(1, np.int64)).astype(np.int32)),
+            fb_count=jnp.asarray(self.fallback_fps.size, jnp.int32),
         )
 
     def lookup_jnp(self, fps, arrs=None):

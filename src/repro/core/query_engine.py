@@ -20,6 +20,11 @@ one reduce dispatch per wave:
   * **Host fallback** — segments built without bitmap planes (plane
     budget exceeded) are probed on the host, with an LRU cache of
     decoded BIC posting lists, and their bitmaps OR-ed into the wave.
+  * **Device candidate extraction** — the combined hit bitmaps compact
+    into posting-id lists on device (Pallas ``bitmap_extract`` kernel /
+    jnp ref), so only a (Q, max_hits) id tensor crosses to host; the
+    host-mode fallback decodes rows via an LRU-cached flatnonzero word
+    decode instead of a full ``np.unpackbits`` bit matrix.
 
 Semantics match ``query.query_and`` / ``query_or`` exactly: an absent
 token zeroes its bitmap (AND -> empty), an empty query returns empty.
@@ -37,6 +42,7 @@ from .hashing import token_fingerprint
 
 _MIN_Q_BUCKET = 8
 _MIN_T_BUCKET = 1
+_MIN_HITS_BUCKET = 8
 
 
 def _bucket(n: int, lo: int) -> int:
@@ -54,7 +60,8 @@ class QueryEngine:
     """Evaluates query waves against one or more immutable segments."""
 
     def __init__(self, segments, *, n_postings: int | None = None,
-                 lru_lists: int = 4096, bitset_kernel: bool | None = None):
+                 lru_lists: int = 4096, bitset_kernel: bool | None = None,
+                 extract_on_device: bool | None = None):
         self.segments = [s for s in segments if s.n_tokens > 0]
         # The MPHF probe always runs through the Pallas sketch_probe
         # kernel.  The T-axis fold uses the Pallas bitset kernel on real
@@ -64,6 +71,12 @@ class QueryEngine:
         if bitset_kernel is None:
             bitset_kernel = jax.default_backend() == "tpu"
         self._use_bitset_kernel = bitset_kernel
+        # Batched waves compact hit bitmaps into posting-id lists on
+        # device (kernels/bitmap_extract): only the (Q, max_hits) id
+        # tensor crosses to host.  ``False`` keeps extraction on the
+        # host via the LRU-cached flatnonzero word decode.
+        self._extract_on_device = (True if extract_on_device is None
+                                   else extract_on_device)
         if n_postings is None:
             n_postings = max((s.n_postings for s in self.segments),
                              default=0)
@@ -75,8 +88,12 @@ class QueryEngine:
                            if s.planes is None]
         self._seg_fns: dict[int, object] = {}
         self._reduce_fns: dict[str, object] = {}
+        self._extract_fns: dict[int, object] = {}
         self._lru: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self._lru_cap = lru_lists
+        # host-extraction LRU of decoded bitmap rows (keyed by content),
+        # alongside the BIC posting-list LRU above
+        self._bm_lru: OrderedDict[bytes, np.ndarray] = OrderedDict()
         self.compile_count = 0      # jit traces (one per bucket shape)
         self.upload_count = 0       # segment device-cache uploads
 
@@ -110,7 +127,7 @@ class QueryEngine:
 
         fps_pad, mask = self._pack(fps_lists, live)
         bitmaps, counts = self._evaluate(fps_pad, mask, op)
-        postings = self._extract(bitmaps[:len(live)], counts[:len(live)])
+        postings = self._extract(bitmaps, counts[:len(live)])
         for out, i in zip(postings, live):
             results[i] = out
         return results
@@ -133,17 +150,15 @@ class QueryEngine:
 
     # --------------------------------------------------------- evaluation
     def _evaluate(self, fps: np.ndarray, mask: np.ndarray, op: str):
-        """(Qb, Tb) wave -> ((Qb, W) np.uint32 bitmaps, (Qb,) counts).
+        """(Qb, Tb) wave -> ((Qb, W) device uint32 bitmaps, (Qb,) counts).
 
-        One probe dispatch per plane-backed segment (keeping every
-        segment's compiled graph small and its jit cache independent of
-        the fleet size), an OR-accumulate across segments, then one
-        reduce dispatch folding the T axis."""
+        Per-token plane accumulation (:meth:`_device_token_planes` — the
+        hook the sharded engine overrides), an OR of any host-fallback
+        contribution, then one reduce dispatch folding the T axis.  The
+        combined bitmaps STAY on device for the extraction stage; only
+        the per-query counts come back here."""
         fps_dev = jnp.asarray(fps)
-        acc = None          # (Qb, Tb, W) device token planes
-        for si, seg in self._plane_segs:
-            rows = self._seg_fn(si)(fps_dev, self._seg_arrs(seg))
-            acc = rows if acc is None else acc | rows
+        acc = self._device_token_planes(fps_dev)
         host_acc = None     # host-fallback contribution
         for si, seg in self._host_segs:
             rows = self._host_token_planes(si, seg, fps, mask)
@@ -152,7 +167,18 @@ class QueryEngine:
             h = jnp.asarray(host_acc)
             acc = h if acc is None else acc | h
         combined, counts = self._reduce_fn(op)(acc, jnp.asarray(mask))
-        return np.asarray(combined), np.asarray(counts)
+        return combined, np.asarray(counts)
+
+    def _device_token_planes(self, fps_dev):
+        """(Qb, Tb) device fps -> (Qb, Tb, W) OR-accumulated token planes
+        over the plane-backed segments: one probe dispatch per segment
+        (keeping every segment's compiled graph small and its jit cache
+        independent of the fleet size)."""
+        acc = None
+        for si, seg in self._plane_segs:
+            rows = self._seg_fn(si)(fps_dev, self._seg_arrs(seg))
+            acc = rows if acc is None else acc | rows
+        return acc
 
     def _seg_arrs(self, seg):
         had = getattr(seg, "_device_cache_arrs", None) is not None
@@ -239,21 +265,72 @@ class QueryEngine:
         return postings
 
     # --------------------------------------------------------- extraction
-    def _extract(self, bitmaps: np.ndarray, counts: np.ndarray
-                 ) -> list[np.ndarray]:
-        """Vectorized bitmap -> posting-id expansion for a whole wave."""
-        n = bitmaps.shape[0]
+    def _extract(self, bitmaps, counts: np.ndarray) -> list[np.ndarray]:
+        """Bitmap -> posting-id compaction for a whole wave.
+
+        ``bitmaps`` is the (Qb, W) device array straight out of the
+        reduce; ``counts`` covers only the live rows.  Device mode (the
+        default) runs the ``bitmap_extract`` compaction on device and
+        transfers one (Qb, max_hits) id tensor; host mode decodes rows
+        through the LRU-cached flatnonzero word decode — neither path
+        materializes a full (Q, 32*W) bit matrix anywhere."""
+        n = len(counts)
         out: list[np.ndarray] = [np.empty(0, np.int64)] * n
         nz = np.flatnonzero(counts > 0)
         if nz.size == 0:
             return out
-        sel = np.ascontiguousarray(bitmaps[nz])
-        bits = np.unpackbits(sel.view(np.uint8), axis=1, bitorder="little")
-        rows, cols = np.nonzero(bits[:, :self.n_postings])
-        split = np.searchsorted(rows, np.arange(1, nz.size))
-        for j, ids in enumerate(np.split(cols.astype(np.int64), split)):
-            out[int(nz[j])] = ids
+        if self._extract_on_device:
+            # the full (Qb, W) wave is compacted, pad rows included: Qb
+            # is already the power-of-two bucket of the live count, so
+            # slicing to the live rows would save under 2x only on
+            # sub-minimum waves while re-tracing per distinct count
+            max_hits = _bucket(int(counts.max()), _MIN_HITS_BUCKET)
+            ids = np.asarray(self._extract_fn(max_hits)(bitmaps))
+            for i in nz:
+                out[int(i)] = ids[int(i), :int(counts[int(i)])] \
+                    .astype(np.int64)
+            return out
+        rows = np.asarray(bitmaps[:n])
+        for i in nz:
+            out[int(i)] = self._decode_bitmap_host(rows[int(i)])
         return out
+
+    def _extract_fn(self, max_hits: int):
+        """Jitted device compaction: (Qb, W) bitmaps -> (Qb, max_hits)
+        posting ids, -1-padded.  ``max_hits`` is bucketed (power of two)
+        by the caller so repeated waves reuse the same trace."""
+        fn = self._extract_fns.get(max_hits)
+        if fn is None:
+            def body(bitmaps):
+                from ..kernels.bitmap_extract.ops import bitmap_extract
+                ids, _ = bitmap_extract(bitmaps, max_hits=max_hits)
+                return ids
+
+            fn = jax.jit(body)
+            self._extract_fns[max_hits] = fn
+        return fn
+
+    def _decode_bitmap_host(self, row: np.ndarray) -> np.ndarray:
+        """Posting ids of one (W,) uint32 bitmap row, via flatnonzero over
+        the non-empty words only (no full bit-matrix expansion), LRU-cached
+        by row content so repeated needles skip the decode."""
+        key = row.tobytes()
+        hit = self._bm_lru.get(key)
+        if hit is not None:
+            self._bm_lru.move_to_end(key)
+            return hit
+        w_idx = np.flatnonzero(row)
+        if w_idx.size == 0:
+            ids = np.empty(0, np.int64)
+        else:
+            sub, lane = np.nonzero(
+                (row[w_idx][:, None] >> np.arange(32, dtype=np.uint32)) & 1)
+            ids = (w_idx[sub].astype(np.int64) << 5) + lane
+            ids = ids[ids < self.n_postings]
+        self._bm_lru[key] = ids
+        if len(self._bm_lru) > self._lru_cap:
+            self._bm_lru.popitem(last=False)
+        return ids
 
     # ------------------------------------------------------------- sizing
     def index_bytes(self, **kw) -> int:

@@ -4,6 +4,9 @@ Paper hot spots (DynaWarp):
   token_hash      — ingest-side batched token fingerprinting
   sketch_probe    — immutable-sketch MPHF probe (query fast path)
   bitset_ops      — posting-plane AND/OR + popcount (Alg. 3 consumer)
+  bitmap_extract  — hit bitmap -> compacted posting-id lists (device-side
+                    candidate extraction; only (Q, max_hits) ids cross
+                    back to the host)
   csc_probe       — CSC baseline probe (fair sketch-vs-sketch comparison)
 Framework hot spots (assigned archs):
   embedding_bag   — recsys fixed-bag lookup+reduce (scalar prefetch)
@@ -15,6 +18,7 @@ Every kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle); tests
 sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
 """
+from .bitmap_extract.ops import bitmap_extract
 from .bitset_ops.ops import bitset_reduce, bitset_reduce_batch
 from .csc_probe.ops import csc_partition_mask
 from .embedding_bag.ops import embedding_bag_sum
@@ -23,6 +27,7 @@ from .retrieval_score.ops import retrieval_scores, retrieval_topk
 from .sketch_probe.ops import mphf_probe
 from .token_hash.ops import token_fingerprints
 
-__all__ = ["bitset_reduce", "bitset_reduce_batch", "csc_partition_mask",
+__all__ = ["bitmap_extract", "bitset_reduce", "bitset_reduce_batch",
+           "csc_partition_mask",
            "embedding_bag_sum", "flash_decode", "mphf_probe",
            "retrieval_scores", "retrieval_topk", "token_fingerprints"]

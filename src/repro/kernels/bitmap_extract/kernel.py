@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: on-device candidate extraction (bitmap -> ids).
+
+The last host-side stage of the device query path was expanding the
+combined (Q, W) hit bitmaps into posting ids via ``np.unpackbits`` —
+materializing a full (Q, 32*W) bit matrix on the host per wave.  This
+kernel compacts each query's bitmap into a padded id list on device, so
+only the final (Q, max_hits) int32 tensor crosses to the host.
+
+Per query row (grid over Q): a fori_loop walks the W words carrying the
+running hit count.  Each word expands into its 32 bit lanes; the lane
+prefix sum gives every set bit its compacted slot, and a (32, 32)
+select-matrix (cum-1 == slot, a VPU-friendly substitute for an in-word
+scatter) produces the 32 output values, stored at the running offset via
+one dynamic-slice store.  Slots past the word's popcount are junk that
+the next word's store (or the ops-level count mask) overwrites.
+
+The output ref is ``max_hits + 32`` wide so the final word's full-vector
+store never lands out of bounds; ops.py slices the pad off and masks the
+tail with -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _extract_kernel(bm_ref, out_ref, cnt_ref, *, n_words: int,
+                    max_hits: int):
+    row = bm_ref[...]                                    # (1, W) uint32
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (32, 32), 0)
+
+    def body(wi, cnt):
+        wv = row[0, wi]
+        bits = ((wv >> lane) & jnp.uint32(1)).astype(jnp.int32)  # (1, 32)
+        cum = jnp.cumsum(bits, axis=1)                           # inclusive
+        ids = (jnp.int32(32) * wi + lane.astype(jnp.int32))      # (1, 32)
+        # select[s, l]: lane l is this word's (s+1)-th set bit
+        select = ((cum - 1) == slot) & (bits == 1)               # (32, 32)
+        vals = jnp.sum(jnp.where(select, ids, 0),
+                       axis=1, dtype=jnp.int32)                  # (32,)
+        off = jnp.minimum(cnt, max_hits)
+        out_ref[0, pl.ds(off, 32)] = vals
+        return cnt + jnp.sum(bits)
+
+    cnt = jax.lax.fori_loop(0, n_words, body, jnp.int32(0))
+    cnt_ref[0, 0] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("max_hits", "interpret"))
+def bitmap_extract_pallas(bitmaps, *, max_hits: int, interpret: bool = True):
+    """bitmaps (Q, W) uint32 -> (ids (Q, max_hits + 32) int32 with junk
+    past each row's count, counts (Q,) int32)."""
+    q, w = bitmaps.shape
+    ids, counts = pl.pallas_call(
+        functools.partial(_extract_kernel, n_words=w, max_hits=max_hits),
+        grid=(q,),
+        in_specs=[pl.BlockSpec((1, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, max_hits + 32), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((q, max_hits + 32), jnp.int32),
+                   jax.ShapeDtypeStruct((q, 1), jnp.int32)],
+        interpret=interpret,
+    )(bitmaps)
+    return ids, counts[:, 0]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for bitmap_extract."""
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_extract_ref(bitmaps, *, max_hits: int):
+    """(Q, W) uint32 hit bitmaps -> ((Q, max_hits) int32 ids, (Q,) counts).
+
+    Row i holds that query's set-bit positions in ascending order, padded
+    with -1; bits past ``max_hits`` are dropped.  Two-level rank-select,
+    fully vectorized (no scatter/sort/top_k — those all lower to serial
+    loops on XLA CPU): a binary search over the per-word popcount prefix
+    sum locates each output slot's word in log2(W) gather steps, then a
+    5-step prefix-popcount binary search selects the bit lane inside the
+    word.  Work scales as Q * max_hits * log(W) — independent of the
+    bitmap width's bit count.
+    """
+    q, w = bitmaps.shape
+    pc = jax.lax.population_count(bitmaps).astype(jnp.int32)   # (Q, W)
+    cum = jnp.cumsum(pc, axis=1)                               # inclusive
+    counts = cum[:, -1]
+    slot = jnp.broadcast_to(jnp.arange(max_hits, dtype=jnp.int32),
+                            (q, max_hits))
+    # binary search: first word with cum > slot
+    lo = jnp.zeros((q, max_hits), jnp.int32)
+    hi = jnp.full((q, max_hits), w, jnp.int32)
+    for _ in range(max(1, (w - 1).bit_length()) + 1):
+        mid = (lo + hi) >> 1
+        cm = jnp.take_along_axis(cum, jnp.minimum(mid, w - 1), axis=1)
+        go_right = (cm <= slot) & (mid < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    word = jnp.minimum(lo, w - 1)
+    base = jnp.take_along_axis(cum - pc, word, axis=1)         # bits before
+    wv = jnp.take_along_axis(bitmaps, word, axis=1)            # (Q, mh)
+    r = slot - base                                            # in-word rank
+    # 5-step select of the r-th set bit of wv
+    lane = jnp.zeros_like(r)
+    for b in (16, 8, 4, 2, 1):
+        low = (wv >> lane.astype(jnp.uint32)) \
+            & jnp.uint32((1 << b) - 1)
+        cnt = jax.lax.population_count(low).astype(jnp.int32)
+        up = cnt <= r
+        r = r - jnp.where(up, cnt, 0)
+        lane = lane + jnp.where(up, b, 0)
+    ids = word * 32 + lane
+    return jnp.where(slot < counts[:, None], ids, -1), counts

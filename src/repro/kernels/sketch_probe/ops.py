@@ -13,6 +13,34 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def mphf_probe_arrs(fps, arrs, *, level_bits: tuple,
+                    level_word_offset: tuple,
+                    block_q: int = DEFAULT_BLOCK_Q):
+    """Arrs-driven probe: the ONE kernel dispatch path shared by the
+    single-device engine and the sharded per-shard probe.  Everything but
+    the level layout (static kernel metadata) comes from ``arrs`` — an
+    ``mphf.device_arrays()`` dict, possibly a zero-padded row sliced out
+    of a stacked per-shard buffer.  Fallback keys (collided through every
+    level) resolve against the sorted ``fallback_fps`` array, guarded by
+    the dynamic ``fb_count`` so padded/fallback-less rows never match."""
+    fps = jnp.asarray(fps, jnp.uint32)
+    q = fps.shape[0]
+    block_q = min(block_q, max(8, 1 << (q - 1).bit_length()))
+    pad = (-q) % block_q
+    fps_pad = jnp.pad(fps, (0, pad)) if pad else fps
+    idx, absent = sketch_probe_pallas(
+        fps_pad, arrs["words"], arrs["block_rank"],
+        level_bits=level_bits, level_word_offset=level_word_offset,
+        block_q=block_q, interpret=_interpret())
+    idx, absent = idx[:q], absent[:q].astype(bool)
+    fb_fps, fb_idx = arrs["fallback_fps"], arrs["fallback_idx"]
+    fpos = jnp.clip(jnp.searchsorted(fb_fps, fps), 0, fb_fps.shape[0] - 1)
+    fhit = (fb_fps[fpos] == fps) & (fpos < arrs["fb_count"]) & absent
+    idx = jnp.where(fhit, fb_idx[fpos], idx)
+    absent = absent & ~fhit
+    return idx, absent
+
+
 def mphf_probe(mphf, fps, *, block_q: int = DEFAULT_BLOCK_Q, arrs=None):
     """Batched minimal-perfect-hash probe of a built core.mphf.MPHF.
     Returns (idx int32, absent bool) matching mphf.lookup_jnp.
@@ -20,32 +48,10 @@ def mphf_probe(mphf, fps, *, block_q: int = DEFAULT_BLOCK_Q, arrs=None):
     ``arrs`` — an ``mphf.device_arrays()`` dict — lets callers reuse
     already-uploaded device buffers (the QueryEngine per-segment cache);
     without it the host arrays are re-wrapped per call."""
-    fps = jnp.asarray(fps, jnp.uint32)
-    q = fps.shape[0]
-    block_q = min(block_q, max(8, 1 << (q - 1).bit_length()))
-    pad = (-q) % block_q
-    if pad:
-        fps = jnp.pad(fps, (0, pad))
-    words = arrs["words"] if arrs is not None else jnp.asarray(mphf.words)
-    block_rank = (arrs["block_rank"] if arrs is not None
-                  else jnp.asarray(mphf.block_rank))
-    idx, absent = sketch_probe_pallas(
-        fps, words, block_rank,
+    if arrs is None:
+        arrs = mphf.device_arrays()
+    return mphf_probe_arrs(
+        fps, arrs,
         level_bits=tuple(int(x) for x in mphf.level_bits),
         level_word_offset=tuple(int(x) for x in mphf.level_word_offset),
-        block_q=block_q, interpret=_interpret())
-    idx, absent = idx[:q], absent[:q].astype(bool)
-    # fallback keys (collided through every level) — tiny sorted array
-    if mphf.fallback_fps.size:
-        if arrs is not None:
-            fb_fps = arrs["fallback_fps"]
-            fb_idx = arrs["fallback_idx"]
-        else:
-            fb_fps = jnp.asarray(mphf.fallback_fps)
-            fb_idx = jnp.asarray(mphf.fallback_idx.astype("int32"))
-        fpos = jnp.clip(jnp.searchsorted(fb_fps, fps[:q]), 0,
-                        fb_fps.shape[0] - 1)
-        fhit = (fb_fps[fpos] == fps[:q]) & absent
-        idx = jnp.where(fhit, fb_idx[fpos], idx)
-        absent = absent & ~fhit
-    return idx, absent
+        block_q=block_q)

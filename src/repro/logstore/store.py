@@ -269,7 +269,16 @@ class DynaWarpStore(LogStoreBase):
     probe/bitset kernels for batched waves (``query_term_batch``), the
     engine's LRU-cached scalar path for lone queries, and a host
     fallback for plane-less segments.  ``device_query=False`` keeps the
-    paper's sequential host loop on the monolithic sketch."""
+    paper's sequential host loop on the monolithic sketch.
+
+    ``shard_axes`` (e.g. ``('data',)`` or ``('pod', 'data')``) swaps the
+    engine for a :class:`~repro.core.distributed.ShardedQueryEngine`:
+    segments are assigned to mesh shards over every visible device and
+    batched waves fan out via ``shard_map`` — same kernels, bit-identical
+    results.  Compaction-triggered rebuilds stay shard-aware: unchanged
+    segments keep their per-shard device buffers.  ``extract_on_device``
+    picks where hit bitmaps become posting ids (None/True: on device via
+    the ``bitmap_extract`` compaction; False: LRU-cached host decode)."""
     name = "dynawarp"
 
     def __init__(self, *, batch_lines: int = 512, mode: str = "batch",
@@ -277,7 +286,9 @@ class DynaWarpStore(LogStoreBase):
                  ngrams: bool = True, device_query: bool = True,
                  plane_budget_bytes: int = 64 << 20,
                  columnar: bool = True, compact_fanout: int = 4,
-                 auto_compact: bool = True, ingest_cache_size: int = 2048):
+                 auto_compact: bool = True, ingest_cache_size: int = 2048,
+                 shard_axes: tuple | None = None,
+                 extract_on_device: bool | None = None):
         super().__init__(batch_lines=batch_lines,
                          ingest_cache_size=ingest_cache_size)
         if mode not in ("batch", "online", "segmented"):
@@ -290,6 +301,8 @@ class DynaWarpStore(LogStoreBase):
         self.columnar = columnar
         self.compact_fanout = compact_fanout
         self.auto_compact = auto_compact
+        self.shard_axes = tuple(shard_axes) if shard_axes else None
+        self.extract_on_device = extract_on_device
         self._compact_pending = False
         self.sketch = None
         self.segments: list = []
@@ -348,8 +361,7 @@ class DynaWarpStore(LogStoreBase):
             self._fp_chunks = self._post_chunks = None
             self.segments = [self.sketch]
         if self.device_query:
-            self.engine = QueryEngine(self.segments,
-                                      n_postings=len(self.blobs))
+            self.engine = self._build_engine()
         if self.mode == "segmented" and (
                 self._compact_pending or
                 (self.auto_compact and len(self.segments) > self.compact_fanout)):
@@ -393,11 +405,24 @@ class DynaWarpStore(LogStoreBase):
             merge=merge, fanout=fanout)
         if merges:
             if self.engine is not None:
-                self.engine = QueryEngine(self.segments,
-                                          n_postings=len(self.blobs))
+                self.engine = self._build_engine()
             if self._finished:
                 self.stats.index_bytes = self.index_bytes()
         return merges
+
+    def _build_engine(self) -> QueryEngine:
+        """The wave engine over the current segments.  Used at finish()
+        AND after every compaction, so rebuilds keep the sharding layout:
+        surviving segments reuse their uploaded (per-shard) device
+        buffers, merged segments upload once on their first wave."""
+        if self.shard_axes is not None:
+            from ..core.distributed import ShardedQueryEngine
+            return ShardedQueryEngine(self.segments,
+                                      n_postings=len(self.blobs),
+                                      shard_axes=self.shard_axes,
+                                      extract_on_device=self.extract_on_device)
+        return QueryEngine(self.segments, n_postings=len(self.blobs),
+                           extract_on_device=self.extract_on_device)
 
     def index_bytes(self) -> int:
         if self.segments:

@@ -1,0 +1,188 @@
+"""Sharded device retrieval: ShardedQueryEngine vs the single-device
+QueryEngine vs the host oracle (bit-identical on any mesh size), per-shard
+upload caching across engine rebuilds/compaction, heterogeneous
+level-layout bucketing, and the store-level sharded wave vs the scan
+baseline.
+
+Runs on whatever mesh is visible: 1 CPU device under the plain tier-1
+suite, 8 host devices under ``make test-distributed``
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.batch_builder import build_sealed
+from repro.core.distributed import ShardedQueryEngine, default_shard_mesh
+from repro.core.immutable_sketch import build_immutable
+from repro.core.query_engine import QueryEngine
+from repro.core.segment import SegmentWriter
+
+N_DEV = len(jax.devices())
+
+
+def _spill_segments(seed=7, n_vocab=400, n_pairs=8000, n_postings=60):
+    rng = np.random.default_rng(seed)
+    fps = (rng.integers(0, n_vocab, n_pairs).astype(np.uint64)
+           * 2654435761 % (1 << 32)).astype(np.uint32)
+    posts = rng.integers(0, n_postings, n_pairs).astype(np.int64)
+    w = SegmentWriter(memory_limit_bytes=1 << 12)
+    for f, p in zip(fps, posts):
+        w.add_fingerprints(np.asarray([f], np.uint32), int(p))
+    segs = w.finish_segments()
+    assert len(segs) > 1
+    return rng, segs, np.unique(fps), n_postings
+
+
+def _random_queries(rng, uniq, n=20, t_max=5):
+    queries = [[]]
+    for _ in range(n):
+        t = int(rng.integers(1, t_max + 1))
+        q = [int(x) for x in rng.choice(uniq, min(t, len(uniq)),
+                                        replace=False)]
+        if rng.random() < 0.4:  # inject an absent fingerprint
+            q[rng.integers(0, len(q))] = int(rng.integers(0, 2**32))
+        queries.append(q)
+    return queries
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("shard_axes", [("data",), ("pod", "data")])
+def test_sharded_matches_single_engine_and_host(shard_axes):
+    rng, segs, uniq, n_post = _spill_segments()
+    single = QueryEngine(segs, n_postings=n_post)
+    shard = ShardedQueryEngine(segs, n_postings=n_post,
+                               shard_axes=shard_axes)
+    assert shard.n_shards == N_DEV
+    queries = _random_queries(rng, uniq)
+    for op in ("and", "or"):
+        a = single.query_fps_batch(queries, op=op)
+        b = shard.query_fps_batch(queries, op=op)
+        for q, x, y in zip(queries, a, b):
+            np.testing.assert_array_equal(x, y), (op, q)
+            np.testing.assert_array_equal(y, shard.host_query(q, op=op))
+
+
+def test_heterogeneous_layouts_shard_by_bucket():
+    """Segments with different MPHF level layouts must still go through
+    the sharded path — one stacked dispatch per level-layout bucket, no
+    host unroll, results bit-identical to the single-device engine."""
+    rng = np.random.default_rng(3)
+    segs, fp_chunks = [], []
+    for n in (200, 3000, 800, 200, 5000, 50):
+        fps = (rng.integers(0, n, n * 8).astype(np.uint64)
+               * 2654435761 % (1 << 32)).astype(np.uint32)
+        posts = rng.integers(0, 90, fps.size).astype(np.int64)
+        segs.append(build_immutable(build_sealed(fps, posts)))
+        fp_chunks.append(fps)
+    assert len({s._level_layout() for s in segs}) > 1
+    shard = ShardedQueryEngine(segs, n_postings=90)
+    single = QueryEngine(segs, n_postings=90)
+    assert len(shard._buckets) > 1
+    assert sum(len(ids) for _, ids in shard._buckets) == len(segs)
+    uniq = np.unique(np.concatenate(fp_chunks))
+    queries = _random_queries(rng, uniq, n=16)
+    for op in ("and", "or"):
+        for x, y in zip(single.query_fps_batch(queries, op=op),
+                        shard.query_fps_batch(queries, op=op)):
+            np.testing.assert_array_equal(x, y)
+    if N_DEV > 1:  # buffers really shard over the mesh
+        for key, _ in shard._buckets:
+            garrs, _ = shard._bucket_arrs[key]
+            assert not garrs["words"].sharding.is_fully_replicated
+
+
+# ------------------------------------------------------------ upload cache
+def test_per_shard_buffers_upload_exactly_once():
+    rng, segs, uniq, n_post = _spill_segments(seed=11)
+    eng = ShardedQueryEngine(segs, n_postings=n_post)
+    queries = _random_queries(rng, uniq, n=6)
+    for _ in range(3):  # several waves, several bucket shapes
+        eng.query_fps_batch(queries)
+        eng.query_fps_batch(queries[:2], op="or")
+    assert eng.upload_count == len(segs), \
+        "each segment's shard row must upload exactly once"
+
+    # an engine rebuild over the same fleet reuses every uploaded row
+    eng2 = ShardedQueryEngine(segs, n_postings=n_post)
+    eng2.query_fps_batch(queries[:3])
+    assert eng2.upload_count == 0
+
+    # ... and a partially-changed fleet re-uploads ONLY the new segment
+    merged = build_immutable(
+        build_sealed(np.zeros(1, np.uint32), np.zeros(1, np.int64)))
+    eng3 = ShardedQueryEngine(segs[:-1] + [merged], n_postings=n_post)
+    eng3.query_fps_batch(queries[:3])
+    assert eng3.upload_count == 1
+
+
+def test_store_compaction_keeps_shard_caches(small_dataset):
+    from repro.logstore.store import DynaWarpStore
+    s = DynaWarpStore(batch_lines=64, mode="segmented",
+                      memory_limit_bytes=1 << 16, auto_compact=False,
+                      shard_axes=("data",))
+    s.ingest(small_dataset.lines)
+    s.finish()
+    assert type(s.engine).__name__ == "ShardedQueryEngine"
+    n_segs = len(s.segments)
+    assert n_segs > 1
+    before = s.query_term_batch(["info", "gc"])
+    assert s.engine.upload_count == len(s.engine._plane_segs)
+    merges = s.compact(fanout=2)
+    assert merges > 0
+    assert type(s.engine).__name__ == "ShardedQueryEngine"
+    after = s.query_term_batch(["info", "gc"])
+    for x, y in zip(before, after):
+        assert x.matches == y.matches
+    # every merge produced exactly one fresh segment; survivors kept
+    # their per-shard rows from before the rebuild
+    assert s.engine.upload_count <= merges
+
+
+# ------------------------------------------------------------- store level
+def test_sharded_store_matches_plain_and_scan(small_dataset):
+    from repro.logstore.datasets import id_queries, present_id_queries
+    from repro.logstore.store import DynaWarpStore, ScanStore
+    plain = DynaWarpStore(batch_lines=64, mode="segmented",
+                          memory_limit_bytes=1 << 16)
+    shard = DynaWarpStore(batch_lines=64, mode="segmented",
+                          memory_limit_bytes=1 << 16, shard_axes=("data",))
+    scan = ScanStore(batch_lines=64)
+    for s in (plain, shard, scan):
+        s.ingest(small_dataset.lines)
+        s.finish()
+    terms = (present_id_queries(small_dataset, 3, 6) + id_queries(13, 3)
+             + ["info", "gc"])
+    rp = plain.query_term_batch(terms)
+    rs = shard.query_term_batch(terms)
+    for t, x, y in zip(terms, rp, rs):
+        assert x.matches == y.matches, t
+        np.testing.assert_array_equal(np.sort(x.candidate_batches),
+                                      np.sort(y.candidate_batches))
+        assert y.matches == scan.query_term(t).matches, t
+
+
+# --------------------------------------------------------------- extraction
+def test_extraction_modes_bit_identical():
+    """Device-side candidate extraction (the batched default) and the
+    LRU-cached host flatnonzero decode return identical ids."""
+    rng, segs, uniq, n_post = _spill_segments(seed=5, n_pairs=5000)
+    dev = ShardedQueryEngine(segs, n_postings=n_post)
+    host = ShardedQueryEngine(segs, n_postings=n_post,
+                              extract_on_device=False)
+    assert dev._extract_on_device and not host._extract_on_device
+    queries = _random_queries(rng, uniq, n=10)
+    for op in ("and", "or"):
+        for x, y in zip(dev.query_fps_batch(queries, op=op),
+                        host.query_fps_batch(queries, op=op)):
+            np.testing.assert_array_equal(x, y)
+    # repeated host waves hit the bitmap-row LRU
+    host.query_fps_batch(queries)
+    assert len(host._bm_lru) > 0
+
+
+def test_default_mesh_covers_all_devices():
+    mesh = default_shard_mesh(("pod", "data"))
+    assert mesh.shape["pod"] == 1
+    assert mesh.shape["data"] == N_DEV

@@ -7,10 +7,11 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (bitset_reduce, bitset_reduce_batch,
-                           csc_partition_mask, embedding_bag_sum,
-                           mphf_probe, retrieval_scores,
+from repro.kernels import (bitmap_extract, bitset_reduce,
+                           bitset_reduce_batch, csc_partition_mask,
+                           embedding_bag_sum, mphf_probe, retrieval_scores,
                            token_fingerprints)
+from repro.kernels.bitmap_extract.ref import bitmap_extract_ref
 from repro.kernels.bitset_ops.ref import (bitset_reduce_batch_ref,
                                           bitset_reduce_ref)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
@@ -50,6 +51,26 @@ def test_bitset_batch_shapes(q, t, w, op, rng):
     cr, nr = bitset_reduce_batch_ref(jnp.asarray(planes), op=op)
     np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
     np.testing.assert_array_equal(np.asarray(n), np.asarray(nr))
+
+
+@pytest.mark.parametrize("q,w,max_hits", [(1, 1, 8), (8, 4, 16),
+                                          (16, 33, 64), (5, 7, 4)])
+def test_bitmap_extract_shapes(q, w, max_hits, rng):
+    """Kernel vs jnp ref vs a numpy oracle, including the truncation
+    path (max_hits smaller than a row's popcount)."""
+    bm = rng.integers(0, 2**32, (q, w), dtype=np.uint64).astype(np.uint32)
+    bm[0] = 0                                   # an empty row
+    k_ids, k_cnt = bitmap_extract(jnp.asarray(bm), max_hits=max_hits,
+                                  use_kernel=True)
+    r_ids, r_cnt = bitmap_extract_ref(jnp.asarray(bm), max_hits=max_hits)
+    np.testing.assert_array_equal(np.asarray(k_ids), np.asarray(r_ids))
+    np.testing.assert_array_equal(np.asarray(k_cnt), np.asarray(r_cnt))
+    for i in range(q):
+        want = np.flatnonzero(np.unpackbits(bm[i].view(np.uint8),
+                                            bitorder="little"))
+        got = np.asarray(k_ids[i])
+        np.testing.assert_array_equal(got[got >= 0], want[:max_hits])
+        assert int(k_cnt[i]) == want.size
 
 
 @pytest.mark.parametrize("nkeys", [50, 1000, 20000])

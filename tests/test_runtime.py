@@ -154,21 +154,24 @@ def test_health_state():
 
 
 # ------------------------------------------------------------- distributed
-def test_distributed_probe_matches_single(rng):
-    from repro.core.distributed import StackedSketches, distributed_probe
-    from repro.core.mphf import build_mphf
-    mphfs, keysets = [], []
-    for s in range(4):
-        keys = np.unique(rng.integers(0, 2**32, 2000, dtype=np.uint64)
-                         .astype(np.uint32))
-        mphfs.append(build_mphf(keys))
-        keysets.append(keys)
-    st = StackedSketches.stack(mphfs)
-    q = keysets[2][:64]
-    idx, absent = distributed_probe(st, q)
-    ri, ra = mphfs[2].lookup_jnp(jnp.asarray(q))
-    np.testing.assert_array_equal(np.asarray(idx[2]), np.asarray(ri))
-    assert not np.asarray(absent[2]).any()
+def test_sharded_engine_smoke(rng):
+    """The sharded probe path (full suite: tests/test_distributed.py)
+    answers a wave bit-identically to its own host oracle on whatever
+    mesh is visible."""
+    from repro.core.batch_builder import build_sealed
+    from repro.core.distributed import ShardedQueryEngine
+    from repro.core.immutable_sketch import build_immutable
+    fps = (rng.integers(0, 500, 4000).astype(np.uint64)
+           * 2654435761 % (1 << 32)).astype(np.uint32)
+    posts = rng.integers(0, 40, 4000).astype(np.int64)
+    segs = [build_immutable(build_sealed(fps[i::2], posts[i::2]))
+            for i in range(2)]
+    eng = ShardedQueryEngine(segs, n_postings=40)
+    uniq = np.unique(fps)
+    queries = [[int(x) for x in uniq[:3]], [int(uniq[4])]]
+    got = eng.query_fps_batch(queries)
+    for q, g in zip(queries, got):
+        np.testing.assert_array_equal(g, eng.host_query(q))
 
 
 # ------------------------------------------------------------ dryrun utils
