@@ -1,7 +1,8 @@
 PYTHONPATH := src
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-distributed bench bench-smoke bench-smoke-sharded example
+.PHONY: test test-distributed test-persistence bench bench-smoke \
+	bench-smoke-sharded example
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -12,6 +13,15 @@ test:
 test-distributed:
 	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
 		tests/test_distributed.py
+
+# durable segment store: crash recovery + reopen equivalence, plus the
+# same suite on a forced 8-way host mesh (durable-id device-cache keying
+# must hold for per-shard row caches too)
+test-persistence:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_persistence.py
+	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_persistence.py
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

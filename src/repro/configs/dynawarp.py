@@ -42,6 +42,35 @@ Beyond-paper read-path knobs (PR 3, sharded device retrieval), also
     LRU of flatnonzero-decoded bitmap rows (no ``np.unpackbits`` bit
     matrices on either path).  Lone queries always take the scalar
     host path and never materialize bitmaps at all.
+
+Beyond-paper durability knobs (PR 5, manifest-based segment store),
+also ``DynaWarpStore`` constructor arguments:
+  * ``path`` — ``None`` (default) keeps blobs + segments in host RAM
+    (the seed behaviour).  A directory path makes the store durable:
+    compressed batches append to an on-disk blob file as they flush,
+    sealed segments publish as single flat files (``core.serial``,
+    bitmap planes + sealed posting columns included so merges work
+    from disk), and an atomically-swapped ``MANIFEST.json`` (tmp +
+    ``os.replace`` — the paper's §4.2 fault-tolerance primitive) names
+    the live segment files and blob extents.
+    ``DynaWarpStore.open(path)`` recovers the whole store in a fresh
+    process, bit-identical on term/contains/batched/sharded queries.
+  * ``mmap`` — ``True`` (default): ``open()`` serves segment buffers
+    through ``np.memmap`` — only each file's header page is read up
+    front; probes page in lazily and the first device wave streams the
+    upload straight from the page cache.  ``False``: read segment
+    files eagerly into RAM.
+  * ``fsync`` — ``False`` (default): publishes are atomic against
+    process crashes (rename ordering) but not guaranteed against power
+    loss.  ``True``: blob appends, segment files, the manifest, and
+    the directory are fsync'd at every publish point.
+  * ``background_compact`` — ``False`` (default): ``compact()`` runs
+    synchronously (at ``finish()`` under ``auto_compact``, or on
+    demand).  ``True``: compaction moves to an opt-in worker thread —
+    merges read memmapped sealed sources, publish via the same atomic
+    manifest swap, and swap the engine without blocking ingest or
+    queries; drain with ``wait_compaction()``, release with
+    ``close()``.
 """
 from dataclasses import dataclass
 
@@ -66,6 +95,11 @@ class DynaWarpConfig:
     # sharded device retrieval (logstore.store.DynaWarpStore PR 3)
     shard_axes: tuple | None = None  # e.g. ("data",) / ("pod", "data")
     extract_on_device: bool | None = None
+    # durable segment store (logstore.store.DynaWarpStore PR 5)
+    path: str | None = None          # store directory; None = host RAM
+    mmap: bool = True                # open() serves segments via np.memmap
+    fsync: bool = False              # fsync every publish (power-loss safe)
+    background_compact: bool = False  # compact on a worker thread
     # distributed probe layout (launch/dryrun exercises these)
     segments_axis: str = "data"      # segments shard over data (x pod)
     words_axis: str = "model"        # bitmap words shard over model

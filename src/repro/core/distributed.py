@@ -115,19 +115,20 @@ class ShardedQueryEngine(QueryEngine):
 
     def _assign_shards(self) -> None:
         """Stable segment -> shard slots: a segment keeps the slot it was
-        first given (its uploaded rows stay valid across engine rebuilds);
-        new segments fill the least-loaded shards."""
+        first given (its uploaded rows stay valid across engine rebuilds;
+        durable segments keep it across store reopens too, keyed by their
+        durable id); new segments fill the least-loaded shards."""
         load = [0] * self.n_shards
         fresh = []
         for _, seg in self._plane_segs:
-            slot = getattr(seg, "_shard_slot", None)
+            slot = seg.get_shard_slot()
             if slot is not None and slot < self.n_shards:
                 load[slot] += 1
             else:
                 fresh.append(seg)
         for seg in fresh:
             slot = int(np.argmin(load))
-            seg._shard_slot = slot
+            seg.set_shard_slot(slot)
             load[slot] += 1
 
     # -------------------------------------------------------------- buckets
@@ -205,7 +206,7 @@ class ShardedQueryEngine(QueryEngine):
         by_shard: list[list] = [[] for _ in range(self.n_shards)]
         for si in seg_ids:
             seg = self.segments[si]
-            by_shard[seg._shard_slot].append(seg)
+            by_shard[seg.get_shard_slot()].append(seg)
         s_local = max(1, max(len(g) for g in by_shard))
 
         # one row dict per (shard, local slot, replica device)

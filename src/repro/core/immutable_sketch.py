@@ -30,6 +30,29 @@ SIG_SEED = 0x516E4715
 DEFAULT_SIG_BITS = 8
 DEFAULT_PLANE_BUDGET = 64 << 20  # bytes of optional device bitmap planes
 
+# Process-global device-cache registries keyed by DURABLE segment id
+# ("<abs file path>@g<generation>", assigned by the manifest-based store).
+# RAM-only sketches memoize on the object as before; durable sketches share
+# these registries so reopening a store in the same process re-uploads
+# nothing it already staged — the id, not Python object identity, names the
+# uploaded buffers.  Entries are dropped with the segment files (compaction
+# orphan GC calls drop_device_cache / discard_durable_caches).
+_DURABLE_DEVICE_CACHES: dict[str, dict] = {}
+_DURABLE_ROW_CACHES: dict[str, dict] = {}
+_DURABLE_SHARD_SLOTS: dict[str, int] = {}
+
+
+def discard_durable_caches(durable_id_or_path: str) -> None:
+    """Free every registry entry of a durable segment id — or, given a bare
+    file path, of EVERY generation of that path (orphan GC deletes files;
+    a later path reuse must never see stale buffers)."""
+    prefix = durable_id_or_path + "@"
+    for reg in (_DURABLE_DEVICE_CACHES, _DURABLE_ROW_CACHES,
+                _DURABLE_SHARD_SLOTS):
+        for k in [k for k in reg
+                  if k == durable_id_or_path or k.startswith(prefix)]:
+            del reg[k]
+
 
 @dataclass
 class ImmutableSketch:
@@ -48,6 +71,10 @@ class ImmutableSketch:
     # must stay mergeable by the cold-segment compactor; MPHFs alone are
     # not mergeable.  Excluded from size accounting (host-side scratch).
     sealed_source: SealedContent | None = None
+    # Durable segment id ("<abs path>@g<gen>") once the manifest-based
+    # store has published this segment to disk; keys the process-global
+    # device-cache registries instead of object identity.
+    durable_id: str | None = None
 
     # ------------------------------------------------------------------ sizes
     @property
@@ -132,24 +159,44 @@ class ImmutableSketch:
     def device_cache(self) -> dict:
         """Memoized :meth:`device_arrays` — the per-segment device cache of
         the batched query engine.  The flat sketch buffers are uploaded on
-        first use and reused by every later query wave in the process."""
+        first use and reused by every later query wave in the process.
+        Durable segments (published by the manifest-based store) memoize in
+        a process-global registry keyed by :attr:`durable_id`, so a store
+        reopened in the same process re-uploads nothing it already staged."""
+        if self.durable_id is not None:
+            arrs = _DURABLE_DEVICE_CACHES.get(self.durable_id)
+            if arrs is None:
+                arrs = _DURABLE_DEVICE_CACHES[self.durable_id] = \
+                    self.device_arrays()
+            return arrs
         arrs = getattr(self, "_device_cache_arrs", None)
         if arrs is None:
             arrs = self.device_arrays()
             self._device_cache_arrs = arrs
         return arrs
 
+    def has_device_cache(self) -> bool:
+        """Whether this segment's flat buffers are already staged on device
+        (the engines' upload accounting — durable-id aware)."""
+        if self.durable_id is not None:
+            return self.durable_id in _DURABLE_DEVICE_CACHES
+        return getattr(self, "_device_cache_arrs", None) is not None
+
     def device_row_cache(self, key, device, build) -> tuple[dict, bool]:
         """Per-(layout, device) memo of this segment's padded shard row —
         the sharded-engine counterpart of :meth:`device_cache`.  ``build``
         returns the padded HOST arrays; they are uploaded to ``device``
         on first use and reused by every later wave AND by every engine
-        rebuild (compaction keeps unchanged segments' shard buffers).
-        Returns (arrays, uploaded_now)."""
+        rebuild (compaction keeps unchanged segments' shard buffers;
+        durable segments key the registry by :attr:`durable_id`, so even a
+        reopened store's rows stay staged).  Returns (arrays, uploaded_now)."""
         import jax
-        cache = getattr(self, "_device_row_caches", None)
-        if cache is None:
-            cache = self._device_row_caches = {}
+        if self.durable_id is not None:
+            cache = _DURABLE_ROW_CACHES.setdefault(self.durable_id, {})
+        else:
+            cache = getattr(self, "_device_row_caches", None)
+            if cache is None:
+                cache = self._device_row_caches = {}
         k = (key, getattr(device, "id", device))
         arrs = cache.get(k)
         if arrs is not None:
@@ -159,11 +206,32 @@ class ImmutableSketch:
         cache[k] = arrs
         return arrs, True
 
+    def get_shard_slot(self) -> int | None:
+        """Stable shard placement (durable-id aware): a segment keeps the
+        slot it was first given so its uploaded rows survive engine
+        rebuilds AND store reopens within one process."""
+        if self.durable_id is not None:
+            return _DURABLE_SHARD_SLOTS.get(self.durable_id)
+        return getattr(self, "_shard_slot", None)
+
+    def set_shard_slot(self, slot: int) -> None:
+        if self.durable_id is not None:
+            _DURABLE_SHARD_SLOTS[self.durable_id] = int(slot)
+        else:
+            self._shard_slot = int(slot)
+
     def drop_device_cache(self) -> None:
         """Invalidate the memoized device arrays (called on segments merged
-        away by compaction so their device buffers can be freed)."""
+        away by compaction so their device buffers can be freed).  A durable
+        segment also loses its registry identity: its file is about to be
+        GC'd, and an in-flight wave still probing it (background compaction)
+        must fall back to the per-object memo — re-inserting under the dead
+        durable id would leak the upload for the rest of the process."""
         self._device_cache_arrs = None
         self._device_row_caches = None
+        if self.durable_id is not None:
+            discard_durable_caches(self.durable_id)
+            self.durable_id = None
 
     def _level_layout(self) -> tuple[tuple, tuple]:
         """Static MPHF level metadata — the shard/layout bucket key."""

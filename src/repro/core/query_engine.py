@@ -181,7 +181,7 @@ class QueryEngine:
         return acc
 
     def _seg_arrs(self, seg):
-        had = getattr(seg, "_device_cache_arrs", None) is not None
+        had = seg.has_device_cache()
         arrs = seg.device_cache()
         if not had:
             self.upload_count += 1

@@ -182,6 +182,37 @@ class SegmentWriter:
         return list(self.temporaries)
 
 
+def sealed_arrays(content: SealedContent) -> dict[str, np.ndarray]:
+    """Flatten a SealedContent into named flat arrays for the segment-file
+    serializer: the variable-length posting lists become one int64 column
+    plus (L+1,) offsets.  Inverse of :func:`sealed_from_arrays`."""
+    lens = np.asarray([len(l) for l in content.lists], np.int64)
+    flat = (np.concatenate([np.asarray(l, np.int64) for l in content.lists])
+            if lens.sum() else np.empty(0, np.int64))
+    offsets = np.concatenate([np.zeros(1, np.int64), np.cumsum(lens)])
+    return {
+        "fps": np.asarray(content.fps, np.uint32),
+        "list_ids": np.asarray(content.list_ids, np.int64),
+        "lists_flat": flat,
+        "list_offsets": offsets,
+        "refcounts": np.asarray(content.refcounts, np.int64),
+    }
+
+
+def sealed_from_arrays(arrs: dict, *, n_postings: int,
+                       stats: dict | None = None) -> SealedContent:
+    """Rebuild a SealedContent from :func:`sealed_arrays` output.  The
+    posting lists are VIEWS into ``lists_flat`` — when that column is an
+    ``np.memmap`` the lists stay disk-resident and page in lazily, so the
+    cold-segment compactor merges straight from disk."""
+    offsets = np.asarray(arrs["list_offsets"], np.int64)
+    flat = arrs["lists_flat"]
+    lists = [flat[offsets[i]:offsets[i + 1]] for i in range(len(offsets) - 1)]
+    return SealedContent(fps=arrs["fps"], list_ids=arrs["list_ids"],
+                         lists=lists, refcounts=arrs["refcounts"],
+                         n_postings=int(n_postings), stats=dict(stats or {}))
+
+
 def merge_sealed(parts: list[SealedContent]) -> SealedContent:
     """Union of (fingerprint, posting) pairs across temporary segments,
     re-deduplicated — semantically the paper's merge-into-one-mutable-sketch.

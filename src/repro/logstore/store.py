@@ -15,8 +15,11 @@ Stores:
 """
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
@@ -25,15 +28,105 @@ from collections import OrderedDict
 from ..baselines.bloom import BloomPerBatch
 from ..baselines.csc import CSCSketch
 from ..baselines.inverted import InvertedIndex
+from ..core import serial
 from ..core.batch_builder import LineFingerprinter, build_sealed
 from ..core.hashing import token_fingerprint
-from ..core.immutable_sketch import build_immutable
+from ..core.immutable_sketch import build_immutable, discard_durable_caches
 from ..core.query import query_and
 from ..core.query_engine import QueryEngine
 from ..core.segment import SegmentWriter, merge_sealed, tiered_merge
 from ..core.tokenizer import (contains_query_tokens, term_query_tokens,
                               tokenize_line)
+from .blobfile import BlobFile
 from .compress import compress_batch, decompress_batch
+
+MANIFEST_NAME = "MANIFEST.json"
+MANIFEST_FORMAT = 1
+
+
+def _gc_orphan_files(path: str, live_files: set) -> list[str]:
+    """Delete segment files the manifest does not reference, plus stray
+    ``*.tmp`` publish leftovers — the recovery sweep for a crash between a
+    segment-file write and the manifest swap.  Blob files are never GC'd
+    (append-only; un-manifested tail bytes are simply never read)."""
+    removed = []
+    for fname in sorted(os.listdir(path)):
+        is_seg = fname.startswith("seg-") and fname.endswith(".dwp")
+        if not (fname.endswith(".tmp") or (is_seg and fname not in live_files)):
+            continue
+        fpath = os.path.join(path, fname)
+        discard_durable_caches(os.path.abspath(fpath))
+        try:
+            os.unlink(fpath)
+            removed.append(fname)
+        except OSError:  # pragma: no cover - concurrent external delete
+            pass
+    return removed
+
+
+class _CompactionWorker:
+    """Opt-in background compactor (``background_compact=True``): merges
+    run on this worker thread and publish through the store's atomic
+    manifest/engine swap, so ingest and ``finish()`` never block on
+    merging.  ``schedule()`` wakes the worker, ``wait()`` drains pending
+    work (re-raising any worker-side error), ``close()`` drains and
+    joins."""
+
+    def __init__(self, store):
+        self._store = store
+        self._cv = threading.Condition()
+        self._pending = False
+        self._active = False
+        self._stop = False
+        self._error: BaseException | None = None
+        self.merges = 0
+        self._thread = threading.Thread(
+            target=self._run, name="dynawarp-compactor", daemon=True)
+        self._thread.start()
+
+    def schedule(self) -> None:
+        with self._cv:
+            self._pending = True
+            self._cv.notify_all()
+
+    def wait(self, timeout: float | None = None) -> int:
+        """Block until no compaction is pending or running; returns total
+        merge ops performed by the worker so far."""
+        with self._cv:
+            self._cv.wait_for(
+                lambda: ((not self._pending and not self._active)
+                         or self._error is not None), timeout=timeout)
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            return self.merges
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=300)
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(lambda: self._pending or self._stop)
+                if not self._pending and self._stop:
+                    return
+                self._pending = False
+                self._active = True
+            try:
+                self.merges += self._store.compact()
+            except BaseException as e:      # surfaced at wait()/close()
+                with self._cv:
+                    self._error = e
+            finally:
+                with self._cv:
+                    self._active = False
+                    self._cv.notify_all()
 
 
 @dataclass
@@ -278,7 +371,22 @@ class DynaWarpStore(LogStoreBase):
     results.  Compaction-triggered rebuilds stay shard-aware: unchanged
     segments keep their per-shard device buffers.  ``extract_on_device``
     picks where hit bitmaps become posting ids (None/True: on device via
-    the ``bitmap_extract`` compaction; False: LRU-cached host decode)."""
+    the ``bitmap_extract`` compaction; False: LRU-cached host decode).
+
+    ``path`` makes the store DURABLE: compressed data batches append to
+    an on-disk blob file as they flush, sealed segments publish as single
+    flat files (``core.serial``, planes + sealed posting columns
+    included), and a ``MANIFEST.json`` — swapped atomically via
+    tmp + ``os.replace``, the §4.2 fault-tolerance primitive — names the
+    live segment files and blob extents.  :meth:`open` recovers the full
+    store from the manifest with segments served from ``np.memmap``
+    (``mmap`` knob); device caches key on durable segment ids (file path
+    + generation), so a store reopened in-process re-uploads nothing it
+    already staged.  ``fsync=True`` makes every publish survive power
+    loss, not just process death.  ``background_compact=True`` moves
+    :meth:`compact` onto a worker thread — merges publish through the
+    same manifest swap while ingest and queries proceed; drain with
+    :meth:`wait_compaction`, release with :meth:`close`."""
     name = "dynawarp"
 
     def __init__(self, *, batch_lines: int = 512, mode: str = "batch",
@@ -288,7 +396,9 @@ class DynaWarpStore(LogStoreBase):
                  columnar: bool = True, compact_fanout: int = 4,
                  auto_compact: bool = True, ingest_cache_size: int = 2048,
                  shard_axes: tuple | None = None,
-                 extract_on_device: bool | None = None):
+                 extract_on_device: bool | None = None,
+                 path: str | None = None, mmap: bool = True,
+                 fsync: bool = False, background_compact: bool = False):
         super().__init__(batch_lines=batch_lines,
                          ingest_cache_size=ingest_cache_size)
         if mode not in ("batch", "online", "segmented"):
@@ -304,9 +414,29 @@ class DynaWarpStore(LogStoreBase):
         self.shard_axes = tuple(shard_axes) if shard_axes else None
         self.extract_on_device = extract_on_device
         self._compact_pending = False
+        self._pending_fanout: int | None = None
         self.sketch = None
         self.segments: list = []
         self.engine: QueryEngine | None = None
+        # durable-store state (path=None keeps everything in host RAM)
+        self.path = path
+        self.mmap = mmap
+        self.fsync = fsync
+        self.background_compact = background_compact
+        self._manifest_gen = 0
+        self._seg_seq = 0
+        self._blob_name = "blobs-000001.dat"
+        self._seg_lock = threading.RLock()      # publish/swap critical section
+        self._compact_lock = threading.Lock()   # serializes compactors
+        self._worker: _CompactionWorker | None = None
+        if path is not None:
+            if os.path.exists(os.path.join(path, MANIFEST_NAME)):
+                raise ValueError(
+                    f"{path}: a published store already lives here — "
+                    f"use DynaWarpStore.open() to read it")
+            os.makedirs(path, exist_ok=True)
+            self.blobs = BlobFile(os.path.join(path, self._blob_name),
+                                  fsync=fsync)
         if columnar:
             self._fingerprinter = LineFingerprinter(
                 ngrams=ngrams, cache_size=self._fp_cache_cap)
@@ -318,6 +448,8 @@ class DynaWarpStore(LogStoreBase):
         else:
             self._fp_chunks: list[np.ndarray] = []
             self._post_chunks: list[np.ndarray] = []
+        if background_compact:
+            self._worker = _CompactionWorker(self)
 
     # ---------------------------------------------------------------- ingest
     def _index_batch(self, lines: list[str], batch_id: int) -> None:
@@ -365,50 +497,239 @@ class DynaWarpStore(LogStoreBase):
         if self.mode == "segmented" and (
                 self._compact_pending or
                 (self.auto_compact and len(self.segments) > self.compact_fanout)):
-            self.compact()
+            if self._worker is not None:
+                self._compact_pending = False
+                self._worker.schedule()
+            else:
+                self.compact()
+
+    def finish(self) -> None:
+        already = self._finished
+        super().finish()
+        if self.path is not None and not already:
+            self._persist()
+
+    def wait_compaction(self, timeout: float | None = None) -> int:
+        """Drain the background compactor (no-op without one); returns its
+        total merge ops and re-raises any worker-side error."""
+        if self._worker is None:
+            return 0
+        return self._worker.wait(timeout)
+
+    def close(self) -> None:
+        """Drain background work, release file handles, and free this
+        store's staged device buffers from the process-global durable
+        registries (closing means done — without this, a process cycling
+        through many stores would accumulate every store's uploads
+        forever).  Idempotent; a finished durable store can be reopened
+        with :meth:`open` (its first wave re-stages)."""
+        if self._worker is not None:
+            self._worker.close()
+            self._worker = None
+        if isinstance(self.blobs, BlobFile):
+            self.blobs.sync()
+            self.blobs.close()
+        for seg in self.segments:
+            if seg.durable_id is not None:
+                discard_durable_caches(seg.durable_id)
 
     # ------------------------------------------------------------ compaction
-    def request_compact(self) -> None:
+    def request_compact(self, *, fanout: int | None = None) -> None:
         """Mark a compaction as pending; it runs at the next ``finish()``
-        (or immediately via :meth:`compact` once segments exist).  Pending
+        (or immediately via :meth:`compact` once segments exist).  On a
+        finished store with a background worker it schedules right away —
+        the worker merges and publishes off-thread.  ``fanout`` overrides
+        the store's ``compact_fanout`` for that one run.  Pending
         compactions never affect how the partial tail batch is flushed."""
         self._compact_pending = True
+        self._pending_fanout = fanout
+        if self._worker is not None and self._finished and self.segments:
+            self._worker.schedule()
 
     def compact(self, *, fanout: int | None = None) -> int:
         """Size-tiered merge of cold segments (mode='segmented'): whenever
         ``fanout`` segments share a power-of-two size tier they merge into
-        one via ``merge_sealed`` on their retained sealed sources, bounding
-        query fan-out at O(log n) segments.  Returns the number of merge
-        ops.  The query engine is rebuilt over the surviving segments:
-        unchanged segments keep their uploaded device caches, merged-away
-        segments drop theirs, and each newly merged segment uploads exactly
-        once on its first wave."""
-        self._compact_pending = False
-        if len(self.segments) <= 1:
-            return 0
-        if any(s.sealed_source is None for s in self.segments):
-            raise ValueError("compaction requires segments built with "
-                             "retained sealed sources (mode='segmented')")
-        fanout = fanout or self.compact_fanout
+        one via ``merge_sealed`` on their retained sealed sources —
+        ``np.memmap``-backed for a reopened durable store, so the merge
+        streams from disk — bounding query fan-out at O(log n) segments.
+        Returns the number of merge ops.
 
-        def merge(group):
-            for s in group:
-                s.drop_device_cache()
-            part = merge_sealed([s.sealed_source for s in group])
-            sk = build_immutable(part, sig_bits=self.sig_bits,
-                                 plane_budget_bytes=self.plane_budget)
-            sk.sealed_source = part
-            return sk
+        Durable stores publish before they switch: merged segment files
+        are written, the manifest swaps atomically, orphaned inputs are
+        deleted, and only then does the in-RAM segment list (and the
+        rebuilt engine) swap in — a crash anywhere mid-compaction leaves
+        either the old or the new manifest, never a broken store.
+        Unchanged segments keep their uploaded device caches, merged-away
+        segments drop theirs, and each newly merged segment uploads
+        exactly once on its first wave."""
+        with self._compact_lock:
+            self._compact_pending = False
+            if fanout is None:
+                fanout, self._pending_fanout = self._pending_fanout, None
+            segments = self.segments       # atomic snapshot (post-finish,
+            if len(segments) <= 1:         # only compactors rebind it)
+                return 0
+            if any(s.sealed_source is None for s in segments):
+                raise ValueError("compaction requires segments built with "
+                                 "retained sealed sources (mode='segmented')")
+            fanout = fanout or self.compact_fanout
+            replaced: list = []
 
-        self.segments, merges = tiered_merge(
-            self.segments, size_of=lambda s: s.size_bytes(),
-            merge=merge, fanout=fanout)
-        if merges:
-            if self.engine is not None:
-                self.engine = self._build_engine()
-            if self._finished:
-                self.stats.index_bytes = self.index_bytes()
-        return merges
+            def merge(group):
+                replaced.extend(group)
+                part = merge_sealed([s.sealed_source for s in group])
+                sk = build_immutable(part, sig_bits=self.sig_bits,
+                                     plane_budget_bytes=self.plane_budget)
+                sk.sealed_source = part
+                return sk
+
+            segments, merges = tiered_merge(
+                segments, size_of=lambda s: s.size_bytes(),
+                merge=merge, fanout=fanout)
+            if not merges:
+                return 0
+            with self._seg_lock:
+                if self.path is not None:
+                    self._persist(segments)
+                self.segments = segments
+                for s in replaced:
+                    s.drop_device_cache()
+                if self.engine is not None:
+                    self.engine = self._build_engine()
+                if self._finished:
+                    self.stats.index_bytes = self.index_bytes()
+            return merges
+
+    # ------------------------------------------------------- durability
+    def _persist(self, segments: list | None = None) -> None:
+        """Publish the store state under ``path``: write any unpublished
+        segment file, swap MANIFEST.json atomically, GC orphans.  The
+        manifest swap is the §4.2 publish point — a crash before it leaves
+        the previous manifest fully live (new files are orphans the next
+        open()/persist sweeps up); a crash after it leaves the new state
+        fully live."""
+        with self._seg_lock:
+            segments = self.segments if segments is None else segments
+            self.blobs.sync()
+            next_gen = self._manifest_gen + 1
+            for seg in segments:
+                if seg.durable_id is None:
+                    self._save_segment(seg, next_gen)
+            manifest = dict(
+                format=MANIFEST_FORMAT, generation=next_gen,
+                seg_seq=self._seg_seq, blob_file=self._blob_name,
+                blob_extents=[list(e) for e in self.blobs.extents],
+                batch_start=[int(x) for x in self.batch_start],
+                n_lines=self._n_lines,
+                segments=[dict(file=seg._durable_file, gen=seg._durable_gen,
+                               bytes=seg._durable_bytes)
+                          for seg in segments],
+                stats=asdict(self.stats),
+                config=dict(mode=self.mode, sig_bits=self.sig_bits,
+                            ngrams=self.uses_ngrams,
+                            batch_lines=self.batch_lines,
+                            columnar=self.columnar,
+                            compact_fanout=self.compact_fanout,
+                            auto_compact=self.auto_compact,
+                            plane_budget_bytes=self.plane_budget))
+            self._swap_manifest(manifest)
+            self._manifest_gen = next_gen
+            _gc_orphan_files(self.path,
+                             {seg._durable_file for seg in segments})
+
+    def _save_segment(self, seg, gen: int) -> None:
+        """Write one segment as a flat file (planes + sealed source
+        included) and stamp its durable id — file path + generation, the
+        process-global device-cache key."""
+        self._seg_seq += 1
+        fname = f"seg-{self._seg_seq:06d}.dwp"
+        fpath = os.path.join(self.path, fname)
+        nbytes = serial.save(seg, fpath, fsync=self.fsync)
+        seg._durable_file = fname
+        seg._durable_gen = gen
+        seg._durable_bytes = nbytes
+        seg.durable_id = f"{os.path.abspath(fpath)}@g{gen}"
+
+    def _swap_manifest(self, manifest: dict) -> None:
+        """Atomic manifest publish (tmp + ``os.replace``).  Everything
+        before this call is invisible to readers; everything after is
+        recoverable.  Crash-recovery tests override this to simulate a
+        kill at the exact publish boundary."""
+        mpath = os.path.join(self.path, MANIFEST_NAME)
+        tmp = mpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, mpath)
+        if self.fsync:
+            serial.fsync_dir(self.path)
+
+    @classmethod
+    def open(cls, path: str, *, mmap: bool = True, device_query: bool = True,
+             shard_axes: tuple | None = None,
+             extract_on_device: bool | None = None,
+             background_compact: bool = False,
+             fsync: bool = False) -> "DynaWarpStore":
+        """Recover a durable store from its MANIFEST.json: orphan files
+        from any interrupted publish are swept, live segments open
+        ``np.memmap``-backed (only each file's header page is read up
+        front), the blob file attaches read-only, and the query engine
+        rebuilds over durable segment ids — so a store reopened in the
+        same process re-uploads no device buffers it already staged.
+        The store comes back finished (no further ingest) but fully
+        queryable and compactable."""
+        mpath = os.path.join(path, MANIFEST_NAME)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"{path}: no {MANIFEST_NAME} — no store was ever published "
+                f"here (a crash before the first manifest swap publishes "
+                f"nothing)")
+        with open(mpath) as f:
+            man = json.load(f)
+        if man.get("format", 0) > MANIFEST_FORMAT:
+            raise ValueError(f"{path}: manifest format {man['format']} is "
+                             f"newer than this reader ({MANIFEST_FORMAT})")
+        cfg = man["config"]
+        store = cls(batch_lines=cfg["batch_lines"], mode=cfg["mode"],
+                    sig_bits=cfg["sig_bits"], ngrams=cfg["ngrams"],
+                    device_query=device_query, columnar=cfg["columnar"],
+                    plane_budget_bytes=cfg["plane_budget_bytes"],
+                    compact_fanout=cfg["compact_fanout"],
+                    auto_compact=cfg["auto_compact"],
+                    shard_axes=shard_axes, extract_on_device=extract_on_device,
+                    background_compact=background_compact)
+        store.path = path
+        store.mmap = mmap
+        store.fsync = fsync
+        store._manifest_gen = int(man["generation"])
+        store._seg_seq = int(man["seg_seq"])
+        store._blob_name = man["blob_file"]
+        # recovery sweep BEFORE anything loads: a crash between a segment
+        # write and the manifest swap leaves orphans; the manifest is truth
+        _gc_orphan_files(path, {e["file"] for e in man["segments"]})
+        store.blobs = BlobFile(os.path.join(path, man["blob_file"]),
+                               extents=man["blob_extents"], writable=False)
+        store.batch_start = [int(x) for x in man["batch_start"]]
+        store._n_lines = int(man["n_lines"])
+        store.stats = IngestStats(**man["stats"])
+        segs = []
+        for e in man["segments"]:
+            fpath = os.path.join(path, e["file"])
+            sk = serial.load(fpath, mmap=mmap)
+            sk.durable_id = f"{os.path.abspath(fpath)}@g{int(e['gen'])}"
+            sk._durable_file = e["file"]
+            sk._durable_gen = int(e["gen"])
+            sk._durable_bytes = int(e["bytes"])
+            segs.append(sk)
+        store.segments = segs
+        if store.mode != "segmented" and len(segs) == 1:
+            store.sketch = segs[0]
+        store._finished = True
+        if store.device_query:
+            store.engine = store._build_engine()
+        return store
 
     def _build_engine(self) -> QueryEngine:
         """The wave engine over the current segments.  Used at finish()

@@ -1,0 +1,343 @@
+"""Durable segment store (§4.2): manifest-based on-disk lifecycle.
+
+Covers the acceptance contract end to end:
+  * a store ingested with ``path=...``, closed, and reopened answers
+    term / contains / ``query_term_batch`` / sharded queries
+    bit-identically to the never-closed in-RAM store,
+  * segments are served from ``np.memmap`` (no full-file reads on open),
+  * device caches key on durable segment ids — a reopened store
+    re-uploads nothing the process already staged,
+  * crash recovery: a kill between segment-file write and manifest swap
+    (and mid-compaction) recovers the pre-crash state with orphans GC'd,
+  * compaction — foreground and background — preserves equivalence
+    through the atomic manifest swap,
+  * segment-file fidelity: stats and plane presence/geometry round-trip
+    exactly, with explicit errors on mismatch.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import serial
+from repro.logstore.blobfile import BlobFile
+from repro.logstore.store import (DynaWarpStore, MANIFEST_NAME, ScanStore)
+from repro.logstore.datasets import present_id_queries
+
+SEG_KW = dict(batch_lines=64, mode="segmented", memory_limit_bytes=1 << 14,
+              auto_compact=False)
+
+
+def _queries(ds):
+    return present_id_queries(ds, 3, 5) + ["info", "connection",
+                                           "zzqqabsentzzqq"]
+
+
+def _answers(store, queries):
+    return [store.query_term(t).matches for t in queries]
+
+
+@pytest.fixture(scope="module")
+def ram_store(small_dataset):
+    s = DynaWarpStore(**SEG_KW)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    return s
+
+
+@pytest.fixture(scope="module")
+def durable_dir(small_dataset, tmp_path_factory):
+    """A published durable store directory (ingested once per module)."""
+    d = str(tmp_path_factory.mktemp("dwstore"))
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    s.close()
+    return d
+
+
+# ---------------------------------------------------------------- reopen
+def test_reopen_is_bit_identical(ram_store, durable_dir, small_dataset):
+    """Fresh open() == never-closed in-RAM store on every query type."""
+    re = DynaWarpStore.open(durable_dir)
+    qs = _queries(small_dataset)
+    assert len(re.segments) == len(ram_store.segments)
+    assert re.n_batches == ram_store.n_batches
+    # term (scalar host path) + candidate sets
+    for t in qs:
+        np.testing.assert_array_equal(
+            np.sort(ram_store.candidates_term(t)),
+            np.sort(re.candidates_term(t)))
+        assert re.query_term(t).matches == ram_store.query_term(t).matches
+    # contains (n-gram tokens across borders)
+    for full_id in qs[:3]:
+        sub = full_id[2:14]
+        assert re.query_contains(sub).matches \
+            == ram_store.query_contains(sub).matches
+    # batched device wave
+    for a, b in zip(ram_store.candidates_term_batch(qs),
+                    re.candidates_term_batch(qs)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+    # the scan oracle agrees too (no false negatives through the reopen)
+    scan = ScanStore(batch_lines=64)
+    scan.ingest(small_dataset.lines)
+    scan.finish()
+    for t in qs:
+        assert re.query_term(t).matches == scan.query_term(t).matches
+
+
+def test_reopen_serves_segments_from_memmap(durable_dir):
+    """mmap=True must NOT read segment payloads up front."""
+    re = DynaWarpStore.open(durable_dir, mmap=True)
+    for seg in re.segments:
+        assert isinstance(seg.signatures, np.memmap)
+        assert isinstance(seg.bic_bits, np.memmap)
+        assert seg.planes is None or isinstance(seg.planes, np.memmap)
+        # sealed sources stay disk-resident too: each posting list is a
+        # lazy view into the memmapped flat column
+        assert seg.sealed_source is not None
+        assert all(isinstance(l, np.memmap) for l in seg.sealed_source.lists)
+    eager = DynaWarpStore.open(durable_dir, mmap=False)
+    assert not isinstance(eager.segments[0].signatures, np.memmap)
+
+
+def test_reopen_sharded_is_bit_identical(ram_store, durable_dir,
+                                         small_dataset):
+    """Sharded engine over a reopened store == in-RAM single-device."""
+    re = DynaWarpStore.open(durable_dir, shard_axes=("data",))
+    qs = _queries(small_dataset)
+    for a, b in zip(ram_store.candidates_term_batch(qs),
+                    re.candidates_term_batch(qs)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def _fresh_durable_dir(small_dataset, tmp_path) -> str:
+    """A private store directory whose durable ids no other test's waves
+    have staged yet (the device-cache registries are process-global)."""
+    d = str(tmp_path / "fresh_store")
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    s.close()
+    return d
+
+
+def test_durable_id_device_cache_keying(small_dataset, tmp_path):
+    """Second open() in the same process re-uploads nothing: caches key on
+    (file path + generation), not object identity."""
+    d = _fresh_durable_dir(small_dataset, tmp_path)
+    qs = _queries(small_dataset)
+    first = DynaWarpStore.open(d)
+    first.candidates_term_batch(qs)     # stages every plane segment
+    assert first.engine.upload_count == len(first.engine._plane_segs) > 0
+    again = DynaWarpStore.open(d)
+    res = again.candidates_term_batch(qs)
+    assert again.engine.upload_count == 0
+    for a, b in zip(first.candidates_term_batch(qs), res):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_durable_id_sharded_row_cache_keying(small_dataset, tmp_path):
+    """The sharded engine's per-(layout, device) rows also key durably."""
+    d = _fresh_durable_dir(small_dataset, tmp_path)
+    qs = _queries(small_dataset)
+    first = DynaWarpStore.open(d, shard_axes=("data",))
+    first.candidates_term_batch(qs)
+    assert first.engine.upload_count == len(first.engine._plane_segs) > 0
+    again = DynaWarpStore.open(d, shard_axes=("data",))
+    again.candidates_term_batch(qs)
+    assert again.engine.upload_count == 0
+
+
+def test_open_refuses_unpublished_and_double_create(tmp_path, durable_dir):
+    with pytest.raises(FileNotFoundError):
+        DynaWarpStore.open(str(tmp_path / "nothing_here"))
+    with pytest.raises(ValueError):
+        DynaWarpStore(**SEG_KW, path=durable_dir)  # already published
+
+
+# ------------------------------------------------------- crash recovery
+def test_crash_between_segment_write_and_manifest_swap(small_dataset,
+                                                       tmp_path, ram_store):
+    """Kill at the publish boundary of the FIRST finish(): segment files
+    exist but no manifest was ever swapped in — nothing was published, and
+    open() says so instead of serving a half-written store."""
+    d = str(tmp_path / "crash_first_publish")
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+
+    def boom(manifest):
+        raise OSError("simulated kill at publish")
+    s._swap_manifest = boom
+    with pytest.raises(OSError):
+        s.finish()
+    assert any(f.startswith("seg-") for f in os.listdir(d))
+    with pytest.raises(FileNotFoundError):
+        DynaWarpStore.open(d)
+
+
+def test_crash_mid_compaction_recovers_pre_crash_state(small_dataset,
+                                                       tmp_path, ram_store):
+    """Kill after the merged segment file is written but before the
+    manifest swap: open() recovers the pre-compaction state bit-identically
+    and sweeps the orphaned merged file."""
+    d = str(tmp_path / "crash_compact")
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    s.close()
+    files_before = sorted(os.listdir(d))
+    with open(os.path.join(d, MANIFEST_NAME)) as f:
+        man_before = f.read()
+    qs = _queries(small_dataset)
+    truth = _answers(ram_store, qs)
+
+    crashing = DynaWarpStore.open(d)
+
+    def boom(manifest):
+        raise OSError("simulated kill at publish")
+    crashing._swap_manifest = boom
+    with pytest.raises(OSError):
+        crashing.compact(fanout=2)
+    # the merged file is an orphan on disk; the manifest is untouched
+    assert set(os.listdir(d)) - set(files_before)
+    with open(os.path.join(d, MANIFEST_NAME)) as f:
+        assert f.read() == man_before
+
+    recovered = DynaWarpStore.open(d)
+    assert sorted(os.listdir(d)) == files_before     # orphans swept
+    assert _answers(recovered, qs) == truth
+    for a, b in zip(ram_store.candidates_term_batch(qs),
+                    recovered.candidates_term_batch(qs)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_orphan_and_tmp_files_are_swept_on_open(small_dataset, tmp_path,
+                                                ram_store):
+    d = str(tmp_path / "orphans")
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    s.close()
+    # plant a crashed publish: an unreferenced segment file + a torn tmp
+    serial.save(s.segments[0], os.path.join(d, "seg-999999.dwp"))
+    with open(os.path.join(d, "seg-999998.dwp.tmp"), "wb") as f:
+        f.write(b"torn half-write")
+    re = DynaWarpStore.open(d)
+    names = os.listdir(d)
+    assert "seg-999999.dwp" not in names
+    assert not any(n.endswith(".tmp") for n in names)
+    qs = _queries(small_dataset)
+    assert _answers(re, qs) == _answers(ram_store, qs)
+
+
+# ------------------------------------------------------------ compaction
+def test_durable_compaction_foreground(small_dataset, tmp_path, ram_store):
+    """compact() on a REOPENED store merges from the memmapped sealed
+    sources, publishes atomically, and stays bit-identical."""
+    d = str(tmp_path / "compact_fg")
+    s = DynaWarpStore(**SEG_KW, path=d)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    s.close()
+    re = DynaWarpStore.open(d)
+    assert all(seg.sealed_source is not None for seg in re.segments)
+    n0 = len(re.segments)
+    gen0 = re._manifest_gen
+    merges = re.compact(fanout=2)
+    assert merges > 0 and len(re.segments) < n0
+    assert re._manifest_gen == gen0 + 1
+    qs = _queries(small_dataset)
+    assert _answers(re, qs) == _answers(ram_store, qs)
+    # the published state survives another reopen
+    re2 = DynaWarpStore.open(d)
+    assert len(re2.segments) == len(re.segments)
+    assert _answers(re2, qs) == _answers(ram_store, qs)
+    for a, b in zip(ram_store.candidates_term_batch(qs),
+                    re2.candidates_term_batch(qs)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_durable_compaction_background(small_dataset, tmp_path, ram_store):
+    """The worker thread merges + publishes off-thread; wait_compaction()
+    drains; the swapped-in state is equivalent and reopenable."""
+    d = str(tmp_path / "compact_bg")
+    s = DynaWarpStore(**SEG_KW, path=d, background_compact=True)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    n0 = len(s.segments)
+    s.request_compact(fanout=2)          # schedules on the worker
+    merges = s.wait_compaction(timeout=300)
+    assert merges > 0 and len(s.segments) < n0
+    qs = _queries(small_dataset)
+    assert _answers(s, qs) == _answers(ram_store, qs)
+    s.close()
+    re = DynaWarpStore.open(d)
+    assert len(re.segments) == len(s.segments)
+    assert _answers(re, qs) == _answers(ram_store, qs)
+
+
+# ------------------------------------------------- segment-file fidelity
+def test_segment_file_stats_and_planes_roundtrip(ram_store, tmp_path):
+    seg = ram_store.segments[0]
+    p = str(tmp_path / "seg.dwp")
+    serial.save(seg, p)
+    lo = serial.load(p)
+    assert lo.stats == serial._jsonable(seg.stats)     # exact round-trip
+    assert lo.planes is not None
+    np.testing.assert_array_equal(np.asarray(lo.planes),
+                                  np.asarray(seg.planes))
+    assert lo.planes.shape == seg.planes.shape         # geometry exact
+    assert lo.sig_bits == seg.sig_bits
+    # sealed source round-trips to identical canonical content
+    assert lo.sealed_source.canonical_lists() \
+        == seg.sealed_source.canonical_lists()
+    np.testing.assert_array_equal(np.asarray(lo.sealed_source.fps),
+                                  np.asarray(seg.sealed_source.fps))
+
+
+def test_plane_presence_is_explicit(ram_store, tmp_path):
+    seg = ram_store.segments[0]
+    p = str(tmp_path / "noplanes.dwp")
+    serial.save(seg, p, include_planes=False)
+    with open(p, "rb") as f:                 # header says so explicitly
+        f.seek(8)
+        hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
+        header = json.loads(f.read(hlen))
+    assert header["meta"]["has_planes"] is False
+    assert serial.load(p).planes is None     # honest, not silent
+    with pytest.raises(ValueError):          # caller expectation mismatch
+        serial.load(p, expect_planes=True)
+    p2 = str(tmp_path / "planes.dwp")
+    serial.save(seg, p2)
+    with pytest.raises(ValueError):
+        serial.load(p2, expect_planes=False)
+    # explicit include_planes=True on a plane-less sketch must error
+    import dataclasses
+    bare = dataclasses.replace(seg, planes=None)
+    with pytest.raises(ValueError):
+        serial.save(bare, str(tmp_path / "x.dwp"), include_planes=True)
+
+
+# -------------------------------------------------------------- blobfile
+def test_blobfile_torn_tail_is_truncated(tmp_path):
+    p = str(tmp_path / "blobs.dat")
+    bf = BlobFile(p)
+    exts = []
+    for payload in (b"alpha", b"beta", b"gamma"):
+        bf.append(payload)
+    exts = list(bf.extents)
+    bf.close()
+    with open(p, "ab") as f:                 # a torn, unpublished append
+        f.write(b"TORN-GARBAGE")
+    re = BlobFile(p, extents=exts)           # reopen truncates to extents
+    assert [re[i] for i in range(len(re))] == [b"alpha", b"beta", b"gamma"]
+    re.append(b"delta")
+    assert re[3] == b"delta"
+    assert os.path.getsize(p) == re.extents[-1][0] + re.extents[-1][1]
+    re.close()
+    ro = BlobFile(p, extents=exts, writable=False)
+    with pytest.raises(ValueError):
+        ro.append(b"nope")
+    ro.close()
