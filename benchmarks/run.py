@@ -7,6 +7,8 @@
   scan_rate         — §6 production scan-rate vs selectivity
   dedup_stats       — §3.2 dedup + fingerprint-memory claims
   probe_bench       — beyond-paper batched device probe
+  live_tail         — beyond-paper live ingest: per-spill publish cost,
+                      snapshot/live query rates, crash-recovery latency
   roofline          — §Roofline table from the dry-run artifact
 
 ``python -m benchmarks.run [--only name]`` writes bench_results.json.
@@ -17,7 +19,8 @@ import sys
 import time
 
 from . import (dedup_stats, disk_usage, error_rate, ingest_speed,
-               probe_bench, query_throughput, roofline, scan_rate)
+               live_tail, probe_bench, query_throughput, roofline,
+               scan_rate)
 
 MODULES = {
     "ingest_speed": ingest_speed,
@@ -27,6 +30,7 @@ MODULES = {
     "scan_rate": scan_rate,
     "dedup_stats": dedup_stats,
     "probe_bench": probe_bench,
+    "live_tail": live_tail,
     "roofline": roofline,
 }
 

@@ -71,6 +71,32 @@ also ``DynaWarpStore`` constructor arguments:
     manifest swap, and swap the engine without blocking ingest or
     queries; drain with ``wait_compaction()``, release with
     ``close()``.
+
+Beyond-paper crash-safe live-ingest knobs (PR 6), also
+``DynaWarpStore`` constructor arguments:
+  * ``publish_per_spill`` — ``True`` (default): a durable segmented
+    store swaps its manifest at EVERY spill, not only at ``finish()``.
+    A crashed ingest then loses at most the data since the last spill:
+    ``DynaWarpStore.open(path)`` of the unfinished directory truncates
+    the blob file to the manifested extents, rehydrates the segment
+    writer from the manifested sealed sources, and supports
+    reopen-for-append (``ingest()`` + an idempotent ``finish()``
+    resume where the last publish left off).  Mid-ingest manifests
+    carry ``finished: false``.  ``False``: publish only at
+    ``finish()`` (the PR 5 behaviour; cheaper spills, larger crash
+    window).  Queries during ingest work either way: ``snapshot()``
+    captures a point-in-time reader over the published prefix (safe
+    from another thread), and direct queries on the writing store take
+    an exact host probe over the sealed temporaries + live tail
+    buffer.
+  * ``compact_retry`` — background-compaction robustness: how many
+    times the worker retries a FAILED compaction before surfacing the
+    last error at ``wait_compaction()``/``close()`` (3 by default; 0
+    disables retries).  Transient I/O errors self-heal instead of
+    killing the worker thread or silently dropping the merge.
+  * ``compact_backoff_s`` — initial retry backoff in seconds (0.05 by
+    default); doubles per retry, capped at 30 s.  The backoff sleeps
+    interruptibly so ``close()`` never waits out a pending retry.
 """
 from dataclasses import dataclass
 
@@ -100,6 +126,10 @@ class DynaWarpConfig:
     mmap: bool = True                # open() serves segments via np.memmap
     fsync: bool = False              # fsync every publish (power-loss safe)
     background_compact: bool = False  # compact on a worker thread
+    # crash-safe live ingest (logstore.store.DynaWarpStore PR 6)
+    publish_per_spill: bool = True   # manifest swap at every spill
+    compact_retry: int = 3           # worker retries before surfacing
+    compact_backoff_s: float = 0.05  # initial retry backoff (doubles)
     # distributed probe layout (launch/dryrun exercises these)
     segments_axis: str = "data"      # segments shard over data (x pod)
     words_axis: str = "model"        # bitmap words shard over model

@@ -60,17 +60,25 @@ class SegmentWriter:
                  short_list_threshold: int = 16,
                  sig_bits: int = 8,
                  plane_budget_bytes: int = 64 << 20,
-                 compact_fanout: int = 4):
+                 compact_fanout: int = 4,
+                 auto_spill: bool = True):
         self.memory_limit = memory_limit_bytes
         self.threshold = short_list_threshold
         self.sig_bits = sig_bits
         self.plane_budget = plane_budget_bytes
         self.compact_fanout = compact_fanout
+        # auto_spill=False hands spill timing to the caller: the durable
+        # store spills only at flush-batch boundaries so every sealed
+        # temporary covers exactly the batches already written to the blob
+        # file — the invariant per-spill manifest publication relies on.
+        self.auto_spill = auto_spill
         self.sketch = MutableSketch(short_list_threshold=short_list_threshold)
         self.temporaries: list[SealedContent] = []
         self._col_fps: list[np.ndarray] = []
         self._col_posts: list[np.ndarray] = []
         self._col_bytes = 0
+        self._col_version = 0
+        self._live_sorted: tuple | None = None
         self._adds_since_check = 0
         self.n_spills = 0
         self.n_compactions = 0
@@ -81,7 +89,7 @@ class SegmentWriter:
         self._adds_since_check += len(tokens)
         if self._adds_since_check >= 4096:
             self._adds_since_check = 0
-            if self._memory_bytes() > self.memory_limit:
+            if self.auto_spill and self._memory_bytes() > self.memory_limit:
                 self.spill()
 
     def add_fingerprints(self, fps, posting: int) -> None:
@@ -90,7 +98,7 @@ class SegmentWriter:
         self._adds_since_check += len(fps)
         if self._adds_since_check >= 4096:
             self._adds_since_check = 0
-            if self._memory_bytes() > self.memory_limit:
+            if self.auto_spill and self._memory_bytes() > self.memory_limit:
                 self.spill()
 
     def add_fingerprint_batch(self, fps: np.ndarray,
@@ -107,11 +115,41 @@ class SegmentWriter:
         self._col_fps.append(fps)
         self._col_posts.append(postings)
         self._col_bytes += fps.nbytes + postings.nbytes
-        if self._memory_bytes() > self.memory_limit:
+        self._col_version += 1
+        if self.auto_spill and self._memory_bytes() > self.memory_limit:
             self.spill()
 
     def _memory_bytes(self) -> int:
         return self._col_bytes + self.sketch.memory_bytes()
+
+    # --------------------------------------------------------- live probe
+    def live_postings(self, fp: int) -> np.ndarray:
+        """Exact postings of ``fp`` in the LIVE (un-spilled) content: the
+        columnar tail buffers plus the mutable overflow sketch.  This is
+        the host probe behind queries served *during* ingest — the sealed
+        temporaries cover everything up to the last spill, this covers the
+        rest.  The sorted view of the tail buffers is cached and only
+        rebuilt when the buffers changed since the last probe."""
+        parts: list[np.ndarray] = []
+        if self._col_fps:
+            cache = self._live_sorted
+            if cache is None or cache[0] != self._col_version:
+                flat = np.concatenate(self._col_fps)
+                posts = np.concatenate(self._col_posts)
+                order = np.argsort(flat, kind="stable")
+                cache = (self._col_version, flat[order], posts[order])
+                self._live_sorted = cache
+            _, sorted_fps, sorted_posts = cache
+            lo = np.searchsorted(sorted_fps, np.uint32(fp), side="left")
+            hi = np.searchsorted(sorted_fps, np.uint32(fp), side="right")
+            if hi > lo:
+                parts.append(np.asarray(sorted_posts[lo:hi], np.int64))
+        got = self.sketch.acquire_postings(int(fp))
+        if got is not None:
+            parts.append(np.asarray(got, np.int64))
+        if not parts:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(parts))
 
     # -------------------------------------------------------------- spill
     def _live_part(self) -> SealedContent | None:
@@ -123,6 +161,8 @@ class SegmentWriter:
                                       np.concatenate(self._col_posts)))
             self._col_fps, self._col_posts = [], []
             self._col_bytes = 0
+            self._col_version += 1
+            self._live_sorted = None
         if self.sketch.stats.tokens:
             parts.append(self.sketch.seal())
             self.sketch = MutableSketch(short_list_threshold=self.threshold)
@@ -180,6 +220,19 @@ class SegmentWriter:
         if live is not None:
             self.temporaries.append(live)
         return list(self.temporaries)
+
+
+def sealed_postings(content: SealedContent, fp: int) -> np.ndarray | None:
+    """Exact postings of token fingerprint ``fp`` in one sealed part, or
+    ``None`` when the token is absent.  ``content.fps`` is sorted unique
+    (mutable-sketch seal and ``build_sealed`` both guarantee it), so this
+    is a binary search — the reader-side probe of sealed-but-unfinished
+    temporaries needs no sketch and has no false positives."""
+    fps = np.asarray(content.fps)
+    i = int(np.searchsorted(fps, np.uint32(fp)))
+    if i >= len(fps) or int(fps[i]) != int(fp):
+        return None
+    return np.asarray(content.lists[int(content.list_ids[i])], np.int64)
 
 
 def sealed_arrays(content: SealedContent) -> dict[str, np.ndarray]:

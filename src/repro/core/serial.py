@@ -28,6 +28,7 @@ import os
 import numpy as np
 
 from .csf import CompressedStaticFunction
+from .faults import fault_point
 from .immutable_sketch import ImmutableSketch
 from .mphf import MPHF
 
@@ -127,6 +128,7 @@ def save(sketch: ImmutableSketch, path: str, *,
         offset += arr.nbytes
     header = json.dumps(dict(meta=meta, arrays=entries)).encode()
 
+    fault_point("segment.write")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(MAGIC)
@@ -143,6 +145,7 @@ def save(sketch: ImmutableSketch, path: str, *,
         if fsync:
             f.flush()
             os.fsync(f.fileno())
+    fault_point("segment.publish")
     os.replace(tmp, path)  # atomic publish (fault-tolerance contract)
     if fsync:
         fsync_dir(os.path.dirname(os.path.abspath(path)))

@@ -15,6 +15,9 @@ from __future__ import annotations
 
 import os
 
+from ..core.faults import fault_point
+from ..core.serial import fsync_dir
+
 MAGIC = b"DWBL0001"
 
 
@@ -26,6 +29,7 @@ class BlobFile:
         self.path = path
         self.fsync = fsync
         self.writable = writable
+        self._dir_synced = False
         self.extents: list[tuple[int, int]] = \
             [(int(o), int(n)) for o, n in (extents or [])]
         exists = os.path.exists(path)
@@ -48,7 +52,15 @@ class BlobFile:
     def append(self, blob: bytes) -> int:
         if not self.writable:
             raise ValueError(f"{self.path}: opened read-only")
+        fault_point("blob.append")
         off = self._end
+        try:
+            fault_point("blob.append.torn")
+        except BaseException:
+            # leave the torn tail a real mid-write kill would: part of the
+            # blob on disk, no extent recorded (reopen must truncate it)
+            os.pwrite(self._fd, blob[:len(blob) // 2 + 1], off)
+            raise
         os.pwrite(self._fd, blob, off)
         self._end = off + len(blob)
         self.extents.append((off, len(blob)))
@@ -71,9 +83,18 @@ class BlobFile:
 
     def sync(self) -> None:
         """Make every appended blob durable (no-op unless ``fsync``; safe
-        on a closed file so ``close()`` stays idempotent)."""
+        on a closed file so ``close()`` stays idempotent).  The first sync
+        also fsyncs the containing directory: file fsync does not persist
+        the file's own directory entry, so without it a freshly created
+        blob file can vanish entirely on power loss even though its bytes
+        were synced (the manifest/segment publishes already fsync their
+        directory after ``os.replace`` for the same reason)."""
         if self.fsync and self.writable and self._fd is not None:
+            fault_point("blob.fsync")
             os.fsync(self._fd)
+            if not self._dir_synced:
+                fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+                self._dir_synced = True
 
     def close(self) -> None:
         fd = getattr(self, "_fd", None)

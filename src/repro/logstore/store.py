@@ -30,18 +30,24 @@ from ..baselines.csc import CSCSketch
 from ..baselines.inverted import InvertedIndex
 from ..core import serial
 from ..core.batch_builder import LineFingerprinter, build_sealed
+from ..core.faults import fault_point
 from ..core.hashing import token_fingerprint
 from ..core.immutable_sketch import build_immutable, discard_durable_caches
 from ..core.query import query_and
 from ..core.query_engine import QueryEngine
-from ..core.segment import SegmentWriter, merge_sealed, tiered_merge
+from ..core.segment import (SegmentWriter, merge_sealed, sealed_postings,
+                            tiered_merge)
 from ..core.tokenizer import (contains_query_tokens, term_query_tokens,
                               tokenize_line)
 from .blobfile import BlobFile
 from .compress import compress_batch, decompress_batch
 
 MANIFEST_NAME = "MANIFEST.json"
-MANIFEST_FORMAT = 1
+# format 2: adds ``finished`` (live-ingest manifests published at every
+# spill carry finished=false until the final finish() publish), writer
+# counters for reopen-for-append, and the write-path config knobs the
+# resumed writer needs.  Format-1 manifests read as finished=true.
+MANIFEST_FORMAT = 2
 
 
 def _gc_orphan_files(path: str, live_files: set) -> list[str]:
@@ -64,13 +70,23 @@ def _gc_orphan_files(path: str, live_files: set) -> list[str]:
     return removed
 
 
+_BACKOFF_CAP_S = 30.0
+
+
 class _CompactionWorker:
     """Opt-in background compactor (``background_compact=True``): merges
     run on this worker thread and publish through the store's atomic
     manifest/engine swap, so ingest and ``finish()`` never block on
     merging.  ``schedule()`` wakes the worker, ``wait()`` drains pending
     work (re-raising any worker-side error), ``close()`` drains and
-    joins."""
+    joins.
+
+    The worker must not die silently: a failed job is retried with capped
+    exponential backoff (``store.compact_retry`` retries starting at
+    ``store.compact_backoff_s``), and only after the retries are
+    exhausted does the LAST error surface at ``wait()``/``close()`` —
+    transient I/O errors (a disk that briefly fills, an injected EIO)
+    self-heal, persistent ones are reported instead of swallowed."""
 
     def __init__(self, store):
         self._store = store
@@ -80,6 +96,8 @@ class _CompactionWorker:
         self._stop = False
         self._error: BaseException | None = None
         self.merges = 0
+        self.retries = 0
+        self.last_error: BaseException | None = None
         self._thread = threading.Thread(
             target=self._run, name="dynawarp-compactor", daemon=True)
         self._thread.start()
@@ -119,14 +137,40 @@ class _CompactionWorker:
                 self._pending = False
                 self._active = True
             try:
-                self.merges += self._store.compact()
-            except BaseException as e:      # surfaced at wait()/close()
-                with self._cv:
-                    self._error = e
+                self._run_one_job()
+            except BaseException as e:      # non-Exception (e.g. a
+                with self._cv:              # simulated kill): never
+                    self._error = e         # retried, surfaced directly
             finally:
                 with self._cv:
                     self._active = False
                     self._cv.notify_all()
+
+    def _run_one_job(self) -> None:
+        """One scheduled compaction with capped exponential backoff.
+        Backoff sleeps on the condition variable so ``close()`` can
+        interrupt a retrying worker immediately.  The requested fanout is
+        consumed ONCE here and passed to every attempt — a failed first
+        try must not downgrade its retries to the default fanout."""
+        with self._store._compact_lock:
+            fanout = self._store._pending_fanout
+            self._store._pending_fanout = None
+        delay = max(float(self._store.compact_backoff_s), 1e-3)
+        for attempt in range(max(int(self._store.compact_retry), 0) + 1):
+            if attempt:
+                self.retries += 1
+                with self._cv:
+                    if self._cv.wait_for(lambda: self._stop,
+                                         timeout=min(delay, _BACKOFF_CAP_S)):
+                        break               # shutting down mid-backoff
+                delay *= 2
+            try:
+                self.merges += self._store.compact(fanout=fanout)
+                return
+            except Exception as e:
+                self.last_error = e
+        with self._cv:
+            self._error = self.last_error
 
 
 @dataclass
@@ -153,6 +197,7 @@ class IngestStats:
     ingest_s: float = 0.0        # tokenize + index + buffer
     sketch_finish_s: float = 0.0
     data_finish_s: float = 0.0
+    publish_s: float = 0.0       # per-spill manifest publishes (durable)
     data_bytes: int = 0
     index_bytes: int = 0
     raw_bytes: int = 0
@@ -398,7 +443,9 @@ class DynaWarpStore(LogStoreBase):
                  shard_axes: tuple | None = None,
                  extract_on_device: bool | None = None,
                  path: str | None = None, mmap: bool = True,
-                 fsync: bool = False, background_compact: bool = False):
+                 fsync: bool = False, background_compact: bool = False,
+                 publish_per_spill: bool = True, compact_retry: int = 3,
+                 compact_backoff_s: float = 0.05):
         super().__init__(batch_lines=batch_lines,
                          ingest_cache_size=ingest_cache_size)
         if mode not in ("batch", "online", "segmented"):
@@ -408,6 +455,7 @@ class DynaWarpStore(LogStoreBase):
         self.uses_ngrams = ngrams
         self.device_query = device_query or mode == "segmented"
         self.plane_budget = plane_budget_bytes
+        self.memory_limit_bytes = memory_limit_bytes
         self.columnar = columnar
         self.compact_fanout = compact_fanout
         self.auto_compact = auto_compact
@@ -423,28 +471,50 @@ class DynaWarpStore(LogStoreBase):
         self.mmap = mmap
         self.fsync = fsync
         self.background_compact = background_compact
+        self.publish_per_spill = publish_per_spill
+        self.compact_retry = compact_retry
+        self.compact_backoff_s = compact_backoff_s
         self._manifest_gen = 0
         self._seg_seq = 0
         self._blob_name = "blobs-000001.dat"
         self._seg_lock = threading.RLock()      # publish/swap critical section
         self._compact_lock = threading.Lock()   # serializes compactors
         self._worker: _CompactionWorker | None = None
+        # live-ingest segment state: which flush batches the current
+        # self.segments cover (the published/queryable prefix), the
+        # sealed-part -> sketch identity map that lets a re-sync reuse
+        # already-built (and already-saved) sketches, and the staleness
+        # flag a non-publishing spill leaves for the next snapshot()
+        self._covered_batches = 0
+        self._spill_covered = 0
+        self._seg_by_part: dict = {}
+        self._segments_stale = False
         if path is not None:
             if os.path.exists(os.path.join(path, MANIFEST_NAME)):
                 raise ValueError(
                     f"{path}: a published store already lives here — "
                     f"use DynaWarpStore.open() to read it")
             os.makedirs(path, exist_ok=True)
-            self.blobs = BlobFile(os.path.join(path, self._blob_name),
-                                  fsync=fsync)
+            # a writer that crashed before its FIRST manifest publish may
+            # have left segment/tmp files behind; nothing was ever
+            # published, so sweep them and truncate any stale blob file
+            _gc_orphan_files(path, set())
+            blob_path = os.path.join(path, self._blob_name)
+            if os.path.exists(blob_path):
+                os.unlink(blob_path)
+            self.blobs = BlobFile(blob_path, fsync=fsync)
         if columnar:
             self._fingerprinter = LineFingerprinter(
                 ngrams=ngrams, cache_size=self._fp_cache_cap)
         if mode in ("online", "segmented"):
+            # segmented mode drives spills itself at flush-batch
+            # boundaries (see _flush_batch) so every sealed temporary
+            # covers exactly the batches already in the blob file
             self._writer = SegmentWriter(memory_limit_bytes=memory_limit_bytes,
                                          sig_bits=sig_bits,
                                          plane_budget_bytes=plane_budget_bytes,
-                                         compact_fanout=compact_fanout)
+                                         compact_fanout=compact_fanout,
+                                         auto_spill=(mode == "online"))
         else:
             self._fp_chunks: list[np.ndarray] = []
             self._post_chunks: list[np.ndarray] = []
@@ -476,9 +546,75 @@ class DynaWarpStore(LogStoreBase):
             self._fp_chunks.append(fps)
             self._post_chunks.append(np.full(fps.shape, batch_id, np.int64))
 
+    def _flush_batch(self) -> None:
+        """Segmented mode spills at flush-batch boundaries: the memory
+        check runs after indexing but the spill runs after the batch is
+        written, so a sealed temporary never references a batch whose
+        blob is not on disk yet — the invariant that makes publishing the
+        manifest at every spill safe."""
+        self._index_batch(self._buf, len(self.blobs))
+        spill_due = (self.mode == "segmented" and
+                     self._writer._memory_bytes() > self._writer.memory_limit)
+        self._write_batch()
+        if spill_due:
+            self._spill_publish()
+
+    def _spill_publish(self) -> None:
+        """Store-driven spill: seal the live buffers into a tier-merged
+        temporary and — for a durable store with ``publish_per_spill`` —
+        publish the manifest right here, shrinking the crash-loss window
+        from "since finish()" to "since the last spill".  A RAM store (or
+        ``publish_per_spill=False``) just marks the segment view stale;
+        the next :meth:`snapshot` or ``finish()`` re-syncs lazily."""
+        with self._seg_lock:
+            self._writer.spill()
+            self._spill_covered = len(self.blobs)
+            if self.path is not None and self.publish_per_spill:
+                t0 = time.perf_counter()
+                self._sync_segments(publish=True)
+                self.stats.publish_s += time.perf_counter() - t0
+            else:
+                self._segments_stale = True
+
+    def _sync_segments(self, *, publish: bool) -> None:
+        """Rebind ``self.segments`` (and the engine) to the writer's
+        current temporaries.  Sketches are reused by sealed-part identity:
+        a temporary that survived since the last sync keeps its built
+        sketch, its saved segment file, and its device caches; only new
+        (freshly spilled or tier-merged) parts build — and, when
+        ``publish``, save + manifest-swap — anew.  The disk state always
+        publishes BEFORE the in-RAM swap, so readers and crash recovery
+        both see complete states only."""
+        with self._seg_lock:
+            prev = self._seg_by_part
+            segs, new_map = [], {}
+            for part in self._writer.temporaries:
+                sk = prev.get(id(part))
+                if sk is None:
+                    sk = build_immutable(
+                        part, sig_bits=self.sig_bits,
+                        plane_budget_bytes=self.plane_budget)
+                    sk.sealed_source = part
+                segs.append(sk)
+                new_map[id(part)] = sk
+            replaced = [sk for pid, sk in prev.items() if pid not in new_map]
+            if publish:
+                self._persist(segs)
+            self.segments = segs
+            self._seg_by_part = new_map
+            self._covered_batches = self._spill_covered
+            self._segments_stale = False
+            for sk in replaced:
+                sk.drop_device_cache()
+            if self.device_query:
+                self.engine = self._build_engine()
+
     def _seal_index(self) -> None:
         if self.mode == "segmented":
-            self.segments = self._writer.finish_segments()
+            with self._seg_lock:
+                self._writer._all_parts()   # seal the live tail in place
+                self._spill_covered = len(self.blobs)
+                self._sync_segments(publish=False)
         elif self.mode == "online":
             self.sketch = self._writer.finish()
             self.segments = [self.sketch]
@@ -492,8 +628,10 @@ class DynaWarpStore(LogStoreBase):
                                           plane_budget_bytes=self.plane_budget)
             self._fp_chunks = self._post_chunks = None
             self.segments = [self.sketch]
-        if self.device_query:
-            self.engine = self._build_engine()
+        if self.mode != "segmented":
+            self._covered_batches = self._spill_covered = len(self.blobs)
+            if self.device_query:
+                self.engine = self._build_engine()
         if self.mode == "segmented" and (
                 self._compact_pending or
                 (self.auto_compact and len(self.segments) > self.compact_fanout)):
@@ -588,10 +726,20 @@ class DynaWarpStore(LogStoreBase):
                 merge=merge, fanout=fanout)
             if not merges:
                 return 0
+            fault_point("compact.mid_merge")
             with self._seg_lock:
                 if self.path is not None:
                     self._persist(segments)
                 self.segments = segments
+                if self.mode == "segmented" and hasattr(self, "_writer"):
+                    # pre-finish compaction must not fork the writer's
+                    # view: its temporaries stay the segments' sources so
+                    # the next spill/sync sees the merged parts
+                    self._writer.temporaries = \
+                        [s.sealed_source for s in segments]
+                self._seg_by_part = {id(s.sealed_source): s
+                                     for s in segments
+                                     if s.sealed_source is not None}
                 for s in replaced:
                     s.drop_device_cache()
                 if self.engine is not None:
@@ -615,12 +763,20 @@ class DynaWarpStore(LogStoreBase):
             for seg in segments:
                 if seg.durable_id is None:
                     self._save_segment(seg, next_gen)
+            writer = None
+            if self.mode in ("online", "segmented"):
+                writer = dict(n_spills=self._writer.n_spills,
+                              n_compactions=self._writer.n_compactions)
+            n_batches = len(self.blobs)
             manifest = dict(
                 format=MANIFEST_FORMAT, generation=next_gen,
                 seg_seq=self._seg_seq, blob_file=self._blob_name,
                 blob_extents=[list(e) for e in self.blobs.extents],
-                batch_start=[int(x) for x in self.batch_start],
-                n_lines=self._n_lines,
+                batch_start=[int(x)
+                             for x in self.batch_start[:n_batches + 1]],
+                n_lines=int(self.batch_start[n_batches]),
+                finished=self._finished,
+                writer=writer,
                 segments=[dict(file=seg._durable_file, gen=seg._durable_gen,
                                bytes=seg._durable_bytes)
                           for seg in segments],
@@ -631,7 +787,11 @@ class DynaWarpStore(LogStoreBase):
                             columnar=self.columnar,
                             compact_fanout=self.compact_fanout,
                             auto_compact=self.auto_compact,
-                            plane_budget_bytes=self.plane_budget))
+                            plane_budget_bytes=self.plane_budget,
+                            memory_limit_bytes=self.memory_limit_bytes,
+                            publish_per_spill=self.publish_per_spill,
+                            compact_retry=self.compact_retry,
+                            compact_backoff_s=self.compact_backoff_s))
             self._swap_manifest(manifest)
             self._manifest_gen = next_gen
             _gc_orphan_files(self.path,
@@ -657,12 +817,15 @@ class DynaWarpStore(LogStoreBase):
         kill at the exact publish boundary."""
         mpath = os.path.join(self.path, MANIFEST_NAME)
         tmp = mpath + ".tmp"
+        fault_point("manifest.tmp_write")
         with open(tmp, "w") as f:
             json.dump(manifest, f)
             if self.fsync:
                 f.flush()
                 os.fsync(f.fileno())
+        fault_point("manifest.replace")
         os.replace(tmp, mpath)
+        fault_point("manifest.dir_fsync")
         if self.fsync:
             serial.fsync_dir(self.path)
 
@@ -675,11 +838,20 @@ class DynaWarpStore(LogStoreBase):
         """Recover a durable store from its MANIFEST.json: orphan files
         from any interrupted publish are swept, live segments open
         ``np.memmap``-backed (only each file's header page is read up
-        front), the blob file attaches read-only, and the query engine
-        rebuilds over durable segment ids — so a store reopened in the
-        same process re-uploads no device buffers it already staged.
-        The store comes back finished (no further ingest) but fully
-        queryable and compactable."""
+        front), and the query engine rebuilds over durable segment ids —
+        so a store reopened in the same process re-uploads no device
+        buffers it already staged.
+
+        A FINISHED manifest comes back read-only (queryable and
+        compactable).  An UNFINISHED one — published by a per-spill swap
+        before the writer crashed — comes back writable: the blob file
+        reopens for append (truncating any torn tail past the manifested
+        extents), the segment writer rehydrates its tiered temporaries
+        from the manifested sealed sources, and ``ingest()`` +
+        ``finish()`` resume exactly where the last publish left off.
+        Everything after the last published spill is lost by design; the
+        recovered line count is always the last manifested batch
+        boundary."""
         mpath = os.path.join(path, MANIFEST_NAME)
         if not os.path.exists(mpath):
             raise FileNotFoundError(
@@ -692,12 +864,18 @@ class DynaWarpStore(LogStoreBase):
             raise ValueError(f"{path}: manifest format {man['format']} is "
                              f"newer than this reader ({MANIFEST_FORMAT})")
         cfg = man["config"]
+        finished = bool(man.get("finished", True))
         store = cls(batch_lines=cfg["batch_lines"], mode=cfg["mode"],
                     sig_bits=cfg["sig_bits"], ngrams=cfg["ngrams"],
                     device_query=device_query, columnar=cfg["columnar"],
                     plane_budget_bytes=cfg["plane_budget_bytes"],
                     compact_fanout=cfg["compact_fanout"],
                     auto_compact=cfg["auto_compact"],
+                    memory_limit_bytes=cfg.get("memory_limit_bytes",
+                                               32 << 20),
+                    publish_per_spill=cfg.get("publish_per_spill", True),
+                    compact_retry=cfg.get("compact_retry", 3),
+                    compact_backoff_s=cfg.get("compact_backoff_s", 0.05),
                     shard_axes=shard_axes, extract_on_device=extract_on_device,
                     background_compact=background_compact)
         store.path = path
@@ -710,7 +888,8 @@ class DynaWarpStore(LogStoreBase):
         # write and the manifest swap leaves orphans; the manifest is truth
         _gc_orphan_files(path, {e["file"] for e in man["segments"]})
         store.blobs = BlobFile(os.path.join(path, man["blob_file"]),
-                               extents=man["blob_extents"], writable=False)
+                               extents=man["blob_extents"],
+                               writable=not finished, fsync=fsync)
         store.batch_start = [int(x) for x in man["batch_start"]]
         store._n_lines = int(man["n_lines"])
         store.stats = IngestStats(**man["stats"])
@@ -724,9 +903,28 @@ class DynaWarpStore(LogStoreBase):
             sk._durable_bytes = int(e["bytes"])
             segs.append(sk)
         store.segments = segs
+        store._seg_by_part = {id(sk.sealed_source): sk for sk in segs
+                              if sk.sealed_source is not None}
+        store._covered_batches = store._spill_covered = len(store.blobs)
         if store.mode != "segmented" and len(segs) == 1:
             store.sketch = segs[0]
-        store._finished = True
+        store._finished = finished
+        if not finished:
+            if store.mode != "segmented":
+                raise ValueError(
+                    f"{path}: unfinished manifest with mode="
+                    f"{store.mode!r} — only segmented stores publish "
+                    f"mid-ingest")
+            if any(sk.sealed_source is None for sk in segs):
+                raise ValueError(f"{path}: unfinished manifest references "
+                                 f"a segment without its sealed source")
+            # rehydrate the writer: the manifested segments ARE its
+            # tiered temporaries (memmap-backed), ready for more spills
+            w = store._writer
+            w.temporaries = [sk.sealed_source for sk in segs]
+            winfo = man.get("writer") or {}
+            w.n_spills = int(winfo.get("n_spills", len(segs)))
+            w.n_compactions = int(winfo.get("n_compactions", 0))
         if store.device_query:
             store.engine = store._build_engine()
         return store
@@ -751,9 +949,42 @@ class DynaWarpStore(LogStoreBase):
         return self.sketch.size_bytes() if self.sketch else 0
 
     def _candidates(self, tokens) -> np.ndarray:
+        if not self._finished and self.mode == "segmented":
+            return self._live_candidates(tokens)
         if self.engine is not None:
             return self.engine.query(tokens, op="and")
         return query_and(self.sketch, tokens)
+
+    def _live_candidates(self, tokens) -> np.ndarray:
+        """Queries served DURING ingest (mode='segmented'): each token's
+        posting set is the union of (a) exact binary-search lookups in
+        every sealed temporary's posting columns and (b) the writer's
+        live columnar tail-buffer probe — covering every flushed batch,
+        manifested or not, with zero sketch false positives.  The partial
+        line buffer (< batch_lines lines) is not a batch yet and is not
+        visible.  Single-threaded with the ingester by design; a
+        concurrent reader thread uses :meth:`snapshot` instead."""
+        fps = [token_fingerprint(t) for t in tokens]
+        if not fps:
+            return np.empty(0, np.int64)
+        with self._seg_lock:
+            parts = list(self._writer.temporaries)
+            per_token = []
+            for fp in fps:
+                sets = []
+                for part in parts:
+                    got = sealed_postings(part, fp)
+                    if got is not None:
+                        sets.append(got)
+                live = self._writer.live_postings(fp)
+                if len(live):
+                    sets.append(live)
+                per_token.append(np.unique(np.concatenate(sets)) if sets
+                                 else np.empty(0, np.int64))
+        acc = per_token[0]
+        for posts in per_token[1:]:
+            acc = np.intersect1d(acc, posts)
+        return acc.astype(np.int64)
 
     def candidates_term(self, term: str) -> np.ndarray:
         return self._candidates(term_query_tokens(term))
@@ -766,10 +997,121 @@ class DynaWarpStore(LogStoreBase):
 
     def candidates_term_batch(self, terms: list[str]) -> list[np.ndarray]:
         """One engine wave answers the whole batch of term queries."""
+        if not self._finished and self.mode == "segmented":
+            return [self._live_candidates(term_query_tokens(t))
+                    for t in terms]
         if self.engine is None:
             return super().candidates_term_batch(terms)
         return self.engine.query_batch(
             [term_query_tokens(t) for t in terms], op="and")
+
+    # ------------------------------------------------------------- live reads
+    def snapshot(self) -> "StoreSnapshot":
+        """Point-in-time reader over the published prefix; safe to use
+        from another thread while this store keeps ingesting.  The engine
+        and its covered batch count swap together under the publish lock
+        at every spill publish / compaction / finish, so a snapshot
+        always sees a complete prefix — never a torn half-published
+        state.  RAM stores (and ``publish_per_spill=False``) sync their
+        segment view lazily here."""
+        with self._seg_lock:
+            if self._segments_stale:
+                self._sync_segments(publish=False)
+            return StoreSnapshot(self)
+
+
+class StoreSnapshot:
+    """Frozen point-in-time reader over a :class:`DynaWarpStore` prefix.
+
+    Captured atomically under the store's publish lock (see
+    :meth:`DynaWarpStore.snapshot`): the engine, the covered batch count,
+    and a copy of the batch-start prefix swap together, so every answer
+    is exact over the first ``n_batches`` flush batches — the same prefix
+    a crash at capture time would recover.  Blob extents and batch starts
+    are append-only, so reads below the cutoff stay valid forever while
+    the writer keeps appending; the snapshot keeps its own decompress
+    LRU because the writer thread mutates the store's."""
+
+    def __init__(self, store: "DynaWarpStore"):
+        with store._seg_lock:
+            self.engine = store.engine
+            self.n_batches = int(store._covered_batches)
+            self.batch_start = [int(x)
+                                for x in store.batch_start[:self.n_batches + 1]]
+            self.blobs = store.blobs
+        self.n_lines = self.batch_start[-1] if self.batch_start else 0
+        self._batch_cache: OrderedDict[int, tuple] = OrderedDict()
+        self._batch_cache_cap = 32
+
+    # -------------------------------------------------------- candidates
+    def _candidates(self, tokens) -> np.ndarray:
+        if self.engine is None or not tokens:
+            return np.empty(0, np.int64)
+        cand = np.asarray(self.engine.query(tokens, op="and"), np.int64)
+        return cand[cand < self.n_batches]
+
+    def candidates_term(self, term: str) -> np.ndarray:
+        return self._candidates(term_query_tokens(term))
+
+    def candidates_contains(self, term: str) -> np.ndarray:
+        tokens = contains_query_tokens(term)
+        if not tokens:
+            return np.arange(self.n_batches, dtype=np.int64)
+        return self._candidates(tokens)
+
+    def candidates_term_batch(self, terms: list[str]) -> list[np.ndarray]:
+        if self.engine is None:
+            return [np.empty(0, np.int64) for _ in terms]
+        out = self.engine.query_batch(
+            [term_query_tokens(t) for t in terms], op="and")
+        return [np.asarray(c, np.int64)[np.asarray(c, np.int64)
+                                        < self.n_batches] for c in out]
+
+    # ------------------------------------------------------------ queries
+    def query_term(self, term: str) -> QueryResult:
+        return self._post_filter(self.candidates_term(term), term, "term")
+
+    def query_contains(self, term: str) -> QueryResult:
+        return self._post_filter(self.candidates_contains(term), term,
+                                 "contains")
+
+    def query_term_batch(self, terms: list[str]) -> list[QueryResult]:
+        return [self._post_filter(c, t, "term")
+                for c, t in zip(self.candidates_term_batch(terms), terms)]
+
+    def _batch_lower(self, b: int) -> tuple[list[str], list[str]]:
+        hit = self._batch_cache.get(b)
+        if hit is not None:
+            self._batch_cache.move_to_end(b)
+            return hit
+        lines = decompress_batch(self.blobs[b])
+        entry = (lines, [ln.lower() for ln in lines])
+        self._batch_cache[b] = entry
+        if len(self._batch_cache) > self._batch_cache_cap:
+            self._batch_cache.popitem(last=False)
+        return entry
+
+    def _post_filter(self, candidates: np.ndarray, term: str,
+                     mode: str) -> QueryResult:
+        term_l = term.lower()
+        matches: list[int] = []
+        true_batches = 0
+        for b in candidates:
+            _, lowered = self._batch_lower(int(b))
+            base = self.batch_start[int(b)]
+            hit = False
+            for i, low in enumerate(lowered):
+                if term_l not in low:
+                    continue
+                if mode == "contains" \
+                        or LogStoreBase._term_in_line(term_l, low):
+                    matches.append(base + i)
+                    hit = True
+            true_batches += hit
+        return QueryResult(matches=matches,
+                           candidate_batches=np.asarray(candidates),
+                           true_batches=true_batches,
+                           batches_total=self.n_batches)
 
 
 class CscStore(LogStoreBase):

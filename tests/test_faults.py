@@ -1,0 +1,361 @@
+"""Crash-safe live ingest: fault injection, crash-matrix recovery,
+reopen-for-append, and concurrent readers.
+
+The contract under test (ISSUE 6):
+  * the manifest publishes at every spill, so killing the process at ANY
+    registered crashpoint loses at most the data since the last spill;
+  * ``DynaWarpStore.open()`` of the crashed directory yields a store
+    whose term / contains / batched answers are bit-identical to a scan
+    oracle over the recovered prefix (= the last manifested batch
+    boundary);
+  * reopen-for-append + ``finish()`` then converges to the uncrashed
+    run's answers;
+  * a reader thread snapshotting mid-ingest always sees a complete
+    published prefix — no torn reads — on the 1-device and the forced
+    8-way host-mesh paths;
+  * the background compaction worker retries transient errors with
+    backoff and surfaces persistent ones at ``wait_compaction()``.
+
+Run via ``make test-faults`` (executes this file on 1 device and on the
+forced 8-way host mesh).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.logstore.store import DynaWarpStore, ScanStore
+
+KW = dict(batch_lines=64, mode="segmented", memory_limit_bytes=1 << 14,
+          auto_compact=False)
+
+
+@pytest.fixture(scope="module")
+def scan_oracle(small_dataset):
+    s = ScanStore(batch_lines=64)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    return s
+
+
+def _terms(ds):
+    from repro.logstore.datasets import present_id_queries
+    return present_id_queries(ds, 3, 3) + ["info", "connection"]
+
+
+def _prefix(matches, n_lines):
+    return [m for m in matches if m < n_lines]
+
+
+def _assert_oracle_prefix(store, scan, terms, n_lines):
+    """term / contains / query_term_batch bit-identical to the scan
+    oracle over the first ``n_lines`` lines."""
+    for t in terms:
+        assert store.query_term(t).matches \
+            == _prefix(scan.query_term(t).matches, n_lines), t
+    sub = terms[0][2:14]
+    assert store.query_contains(sub).matches \
+        == _prefix(scan.query_contains(sub).matches, n_lines)
+    for t, r in zip(terms, store.query_term_batch(terms)):
+        assert r.matches == _prefix(scan.query_term(t).matches, n_lines), t
+
+
+# ------------------------------------------------------------- injector
+def test_injector_rejects_unknown_crashpoint():
+    with pytest.raises(ValueError):
+        faults.FaultInjector(crash_at="not.a.point")
+
+
+def test_injector_after_times_and_error_modes(tmp_path):
+    """after= skips hits, times= bounds firings, error= substitutes the
+    exception; hits record every arrival at the armed point."""
+    from repro.logstore.blobfile import BlobFile
+    p = str(tmp_path / "b.dat")
+    bf = BlobFile(p)
+    with faults.inject(crash_at="blob.append", after=1,
+                       error=OSError("EIO"), times=1) as inj:
+        bf.append(b"first")                   # hit 1: skipped by after=
+        with pytest.raises(OSError):
+            bf.append(b"second")              # hit 2: fires
+        bf.append(b"third")                   # hit 3: times=1 exhausted
+    assert inj.hits == [1, 2, 3] and inj.fired == 1
+    assert [bf[i] for i in range(len(bf))] == [b"first", b"third"]
+    bf.close()
+
+
+def test_torn_blob_append_leaves_partial_tail(tmp_path):
+    """The blob.append.torn crashpoint writes PART of the blob before
+    raising — exactly the state a mid-write kill leaves — and reopening
+    with the published extents truncates it away."""
+    from repro.logstore.blobfile import BlobFile
+    p = str(tmp_path / "b.dat")
+    bf = BlobFile(p)
+    bf.append(b"published-blob")
+    exts = list(bf.extents)
+    size_before = os.path.getsize(p)
+    with faults.inject(crash_at="blob.append.torn"):
+        with pytest.raises(faults.CrashError):
+            bf.append(b"torn-away-blob")
+    assert os.path.getsize(p) > size_before      # torn bytes on disk
+    assert list(bf.extents) == exts              # but never published
+    bf.close()
+    re = BlobFile(p, extents=exts)
+    assert os.path.getsize(p) == exts[-1][0] + exts[-1][1]
+    assert re[0] == b"published-blob"
+    re.close()
+
+
+def test_blob_sync_fsyncs_directory_once(tmp_path, monkeypatch):
+    """fsync=True blob publication must fsync the containing directory
+    (a new file's directory entry is not persisted by fsyncing the file
+    itself) — once is enough, the entry does not move."""
+    from repro.logstore import blobfile
+    calls = []
+    monkeypatch.setattr(blobfile, "fsync_dir",
+                        lambda path: calls.append(path))
+    bf = blobfile.BlobFile(str(tmp_path / "b.dat"), fsync=True)
+    bf.append(b"x")
+    bf.sync()
+    bf.append(b"y")
+    bf.sync()
+    assert calls == [str(tmp_path)]
+    bf.close()
+
+
+# ----------------------------------------------------------- crash matrix
+INGEST_POINTS = tuple(p for p in faults.CRASHPOINTS
+                      if p != "compact.mid_merge")
+
+
+@pytest.mark.parametrize("crashpoint", INGEST_POINTS)
+def test_crash_matrix_recovers_to_last_publish(crashpoint, small_dataset,
+                                               scan_oracle, tmp_path):
+    """Kill the ingest at every registered crashpoint; open() must
+    recover bit-identical answers over the last manifested prefix, and
+    resume-append + finish() must converge to the uncrashed results."""
+    import json
+    from repro.logstore.store import MANIFEST_NAME
+    d = str(tmp_path / "crash")
+    s = DynaWarpStore(**KW, path=d, fsync=True)
+    with faults.inject(crash_at=crashpoint, after=2) as inj:
+        with pytest.raises(faults.CrashError):
+            s.ingest(small_dataset.lines)
+            s.finish()
+    assert inj.fired == 1 and len(inj.hits) >= 3
+    s.blobs.close()          # the dead process's fd
+
+    terms = _terms(small_dataset)
+    mpath = os.path.join(d, MANIFEST_NAME)
+    if not os.path.exists(mpath):
+        # crashed before the first publish: open() must refuse honestly
+        with pytest.raises(FileNotFoundError):
+            DynaWarpStore.open(d)
+        return
+    with open(mpath) as f:
+        man = json.load(f)
+    assert man["finished"] is False
+
+    re = DynaWarpStore.open(d)
+    # at most the data since the last spill is lost: the recovered count
+    # IS the last manifested batch boundary
+    assert re._n_lines == man["n_lines"] == man["batch_start"][-1] > 0
+    assert not re._finished
+    _assert_oracle_prefix(re, scan_oracle, terms, re._n_lines)
+
+    # reopen-for-append: ingest the lost tail, finish, converge
+    re.ingest(small_dataset.lines[re._n_lines:])
+    re.finish()
+    re.finish()              # idempotent across the crash boundary
+    _assert_oracle_prefix(re, scan_oracle, terms, len(small_dataset.lines))
+    re.close()
+
+    # the finished state survives one more reopen
+    re2 = DynaWarpStore.open(d)
+    assert re2._finished
+    _assert_oracle_prefix(re2, scan_oracle, terms, len(small_dataset.lines))
+    re2.close()
+
+
+def test_crash_mid_compaction_keeps_pre_crash_state(small_dataset,
+                                                    scan_oracle, tmp_path):
+    """compact.mid_merge: kill after the merge but before the publish —
+    recovery serves the pre-compaction state bit-identically, and a
+    clean compaction afterwards converges."""
+    d = str(tmp_path / "crash_compact")
+    s = DynaWarpStore(**KW, path=d, fsync=True)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    n_segs = len(s.segments)
+    s.close()
+    terms = _terms(small_dataset)
+
+    crashing = DynaWarpStore.open(d)
+    with faults.inject(crash_at="compact.mid_merge") as inj:
+        with pytest.raises(faults.CrashError):
+            crashing.compact(fanout=2)
+    assert inj.fired == 1
+    crashing.blobs.close()
+
+    re = DynaWarpStore.open(d)
+    assert len(re.segments) == n_segs           # pre-crash state intact
+    _assert_oracle_prefix(re, scan_oracle, terms, len(small_dataset.lines))
+    assert re.compact(fanout=2) > 0
+    _assert_oracle_prefix(re, scan_oracle, terms, len(small_dataset.lines))
+    re.close()
+
+
+def test_transient_publish_error_resumes_in_process(small_dataset,
+                                                    scan_oracle, tmp_path):
+    """An injected transient I/O error (not a kill) fails one mid-ingest
+    publish; the SAME store object resumes from its own counters and the
+    next publish self-heals — no reopen needed."""
+    d = str(tmp_path / "transient")
+    s = DynaWarpStore(**KW, path=d)
+    boom = OSError("transient EIO")
+    with faults.inject(crash_at="manifest.replace", after=1, times=1,
+                       error=boom):
+        with pytest.raises(OSError):
+            s.ingest(small_dataset.lines)
+    done = s._n_lines                    # flushed-and-indexed watermark
+    assert 0 < done < len(small_dataset.lines)
+    s.ingest(small_dataset.lines[done:])
+    s.finish()
+    _assert_oracle_prefix(s, scan_oracle, _terms(small_dataset),
+                          len(small_dataset.lines))
+    s.close()
+
+
+# ----------------------------------------------------- queries during ingest
+def test_live_queries_match_oracle_prefix(small_dataset, scan_oracle):
+    """Direct queries on an UNFINISHED segmented store (RAM) are exact
+    over every flushed batch — sealed temporaries + live tail probe."""
+    s = DynaWarpStore(**KW)
+    terms = _terms(small_dataset)
+    step = len(small_dataset.lines) // 4
+    for start in range(0, len(small_dataset.lines), step):
+        s.ingest(small_dataset.lines[start:start + step])
+        flushed = s.batch_start[len(s.blobs)]
+        _assert_oracle_prefix(s, scan_oracle, terms, flushed)
+    s.finish()
+    _assert_oracle_prefix(s, scan_oracle, terms, len(small_dataset.lines))
+
+
+def test_ram_snapshot_covers_last_spill(small_dataset, scan_oracle):
+    """RAM stores sync their segment view lazily at snapshot(): the
+    snapshot covers the last spill's prefix and stays frozen while the
+    writer ingests past it."""
+    s = DynaWarpStore(**KW)
+    half = len(small_dataset.lines) // 2
+    s.ingest(small_dataset.lines[:half])
+    snap = s.snapshot()
+    assert 0 < snap.n_lines <= half
+    assert snap.n_batches == s._covered_batches == s._spill_covered
+    assert snap.n_lines == snap.batch_start[-1]
+    s.ingest(small_dataset.lines[half:])
+    s.finish()
+    terms = _terms(small_dataset)
+    for t, r in zip(terms, snap.query_term_batch(terms)):
+        assert r.matches == _prefix(scan_oracle.query_term(t).matches,
+                                    snap.n_lines)
+    # a fresh snapshot of the finished store covers everything
+    full = s.snapshot()
+    assert full.n_lines == len(small_dataset.lines)
+
+
+@pytest.mark.parametrize("shard_axes", [None, ("data",)],
+                         ids=["engine", "sharded"])
+def test_concurrent_reader_sees_consistent_snapshots(small_dataset,
+                                                     scan_oracle, tmp_path,
+                                                     shard_axes):
+    """A reader thread runs query_term_batch on snapshots while the
+    writer ingests and publishes per spill: every result must equal the
+    scan oracle over that snapshot's manifested prefix (no torn reads,
+    no partially visible segments).  Parametrized over the single-device
+    and sharded engines; ``make test-faults`` re-runs both on the forced
+    8-way host mesh."""
+    d = str(tmp_path / "concurrent")
+    s = DynaWarpStore(**KW, path=d, shard_axes=shard_axes)
+    terms = _terms(small_dataset)
+    truth = {t: scan_oracle.query_term(t).matches for t in terms}
+    errors: list = []
+    checks = [0]
+    done = threading.Event()
+
+    def reader():
+        while not done.is_set() or checks[0] == 0:
+            snap = s.snapshot()
+            try:
+                results = snap.query_term_batch(terms)
+            except Exception as e:          # pragma: no cover - failure path
+                errors.append(repr(e))
+                return
+            for t, r in zip(terms, results):
+                if r.matches != _prefix(truth[t], snap.n_lines):
+                    errors.append((t, snap.n_lines))
+                    return
+            checks[0] += 1
+
+    rt = threading.Thread(target=reader)
+    rt.start()
+    try:
+        for i in range(0, len(small_dataset.lines), 100):
+            s.ingest(small_dataset.lines[i:i + 100])
+        s.finish()
+    finally:
+        done.set()
+        rt.join(timeout=300)
+    assert not errors, errors[:3]
+    assert checks[0] > 0
+    s.close()
+
+
+# ------------------------------------------------------ compaction worker
+def test_worker_retries_transient_error_with_backoff(small_dataset,
+                                                     tmp_path):
+    """A transient failure mid-merge self-heals: the worker retries with
+    backoff and the compaction lands; nothing surfaces at wait()."""
+    d = str(tmp_path / "retry")
+    s = DynaWarpStore(**KW, path=d, background_compact=True,
+                      compact_retry=3, compact_backoff_s=0.01)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    n0 = len(s.segments)
+    with faults.inject(crash_at="compact.mid_merge",
+                       error=OSError("transient EIO"), times=1) as inj:
+        s.request_compact(fanout=2)
+        merges = s.wait_compaction(timeout=300)
+    assert inj.fired == 1
+    assert merges > 0 and len(s.segments) < n0
+    assert s._worker.retries >= 1
+    assert isinstance(s._worker.last_error, OSError)
+    s.close()
+
+
+def test_worker_surfaces_persistent_error_and_survives(small_dataset,
+                                                       tmp_path,
+                                                       scan_oracle):
+    """When every retry fails, the LAST error surfaces at
+    wait_compaction() — and the worker thread stays alive for the next
+    job instead of dying silently."""
+    d = str(tmp_path / "persistent")
+    s = DynaWarpStore(**KW, path=d, background_compact=True,
+                      compact_retry=2, compact_backoff_s=0.01)
+    s.ingest(small_dataset.lines)
+    s.finish()
+    with faults.inject(crash_at="compact.mid_merge",
+                       error=OSError("disk on fire")) as inj:
+        s.request_compact(fanout=2)
+        with pytest.raises(OSError, match="disk on fire"):
+            s.wait_compaction(timeout=300)
+    assert inj.fired == 3                      # first try + 2 retries
+    assert s._worker.retries == 2
+    # the worker survived: a clean job still lands
+    n0 = len(s.segments)
+    s.request_compact(fanout=2)
+    assert s.wait_compaction(timeout=300) > 0
+    assert len(s.segments) < n0
+    _assert_oracle_prefix(s, scan_oracle, _terms(small_dataset),
+                          len(small_dataset.lines))
+    s.close()

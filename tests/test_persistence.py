@@ -160,21 +160,30 @@ def test_open_refuses_unpublished_and_double_create(tmp_path, durable_dir):
 # ------------------------------------------------------- crash recovery
 def test_crash_between_segment_write_and_manifest_swap(small_dataset,
                                                        tmp_path, ram_store):
-    """Kill at the publish boundary of the FIRST finish(): segment files
-    exist but no manifest was ever swapped in — nothing was published, and
-    open() says so instead of serving a half-written store."""
+    """Kill at the FIRST publish boundary (now the first spill, since
+    live ingest publishes per spill): segment files exist but no manifest
+    was ever swapped in — nothing was published, open() says so instead
+    of serving a half-written store, and re-creating a store at the path
+    sweeps the stale files."""
     d = str(tmp_path / "crash_first_publish")
     s = DynaWarpStore(**SEG_KW, path=d)
-    s.ingest(small_dataset.lines)
 
     def boom(manifest):
         raise OSError("simulated kill at publish")
     s._swap_manifest = boom
     with pytest.raises(OSError):
+        s.ingest(small_dataset.lines)
         s.finish()
     assert any(f.startswith("seg-") for f in os.listdir(d))
     with pytest.raises(FileNotFoundError):
         DynaWarpStore.open(d)
+    s.blobs.close()
+    # a fresh store at the same path starts clean: stale segment files
+    # and the unpublished blob tail are swept at creation
+    s2 = DynaWarpStore(**SEG_KW, path=d)
+    assert not any(f.startswith("seg-") for f in os.listdir(d))
+    assert len(s2.blobs) == 0
+    s2.close()
 
 
 def test_crash_mid_compaction_recovers_pre_crash_state(small_dataset,
