@@ -1,8 +1,8 @@
 PYTHONPATH := src
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-distributed test-persistence test-faults bench \
-	bench-smoke bench-smoke-sharded example
+.PHONY: test test-distributed test-persistence test-faults test-serving \
+	bench bench-smoke bench-smoke-sharded bench-smoke-serve example
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -32,6 +32,16 @@ test-faults:
 	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
 		tests/test_faults.py
 
+# wave-coalescing serving front end: concurrency battery (equivalence
+# under concurrent clients, flush triggers, admission control, replica
+# routing, snapshot serving under live ingest + writer crash) — on 1
+# device and on the forced 8-way host mesh (waves over sharded engines)
+test-serving:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_serving.py
+	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q \
+		tests/test_serving.py
+
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
@@ -42,6 +52,11 @@ bench-smoke:
 # fast CI gate: sharded retrieval over 8 host devices vs scan
 bench-smoke-sharded:
 	$(MULTIDEV) PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sharded_smoke
+
+# fast CI gate: coalesced-wave serving >= 3x per-query dispatch q/s,
+# bit-identical, under >= 8 open-loop clients (writes a BENCH_serve row)
+bench-smoke-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.serve_load --smoke
 
 example:
 	PYTHONPATH=$(PYTHONPATH) python examples/batched_query.py

@@ -6,11 +6,89 @@ The extra ``device_query`` scenario times the candidate-generation index
 probe itself — the paper's sequential host loop (Alg. 3, one token probe
 at a time) against the batched QueryEngine (one device dispatch per wave
 through the Pallas probe + bitset kernels) — on the same DynaWarp store.
+
+This module also EMITS the serving layer's dispatch-cost model:
+:func:`measure_dispatch_costs` times the scalar host path and one jitted
+device wave per supported Q bucket, and ``run()`` writes the result as
+machine-readable JSON (``bench_costmodel.json``) — the input
+``repro.core.serving.CostModel.load`` feeds to the wave scheduler's
+host-vs-device admission decision.
 """
+import json
+import statistics
 import time
 
 from .common import (DATASETS, QUERY_SCENARIOS, build_store, load_dataset,
                      time_queries)
+
+COST_MODEL_OUT = "bench_costmodel.json"
+
+
+def measure_dispatch_costs(engine, token_lists, *,
+                           buckets=(8, 16, 32, 64, 128, 256),
+                           reps: int = 3, host_samples: int = 64) -> dict:
+    """Measure the serving cost model on ``engine``: scalar host cost
+    per query and one device wave's dispatch cost per Q bucket.
+
+    Machine-readable (the scheduler's input, not a print table): the
+    returned dict matches ``repro.core.serving.CostModel.from_dict`` —
+    ``format``, ``host_us_per_query`` (float), ``device_us_per_wave``
+    (bucket -> microseconds per wave) — plus measurement provenance
+    (``backend``, ``n_segments``, ``reps``).  Each bucket is compiled
+    once (warm-up wave) and timed over ``reps`` dispatches; the median
+    rep is recorded so one GC pause cannot skew the model.
+    """
+    import jax
+
+    from repro.core.serving import COST_MODEL_FORMAT
+
+    buckets = sorted({int(b) for b in buckets})
+    samples = (token_lists * ((host_samples // len(token_lists)) + 1))
+    hs = samples[:host_samples]
+    t0 = time.perf_counter()
+    for toks in hs:
+        engine.host_query(toks, op="and")
+    host_us = (time.perf_counter() - t0) / max(len(hs), 1) * 1e6
+
+    device_us = {}
+    for b in buckets:
+        wave = (token_lists * ((b // len(token_lists)) + 1))[:b]
+        engine.query_batch(wave, op="and")          # compile this bucket
+        times = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            engine.query_batch(wave, op="and")
+            times.append(time.perf_counter() - t0)
+        device_us[b] = statistics.median(times) * 1e6
+    return {
+        "format": COST_MODEL_FORMAT,
+        "host_us_per_query": round(host_us, 2),
+        "device_us_per_wave": {str(b): round(us, 2)
+                               for b, us in device_us.items()},
+        "backend": jax.default_backend(),
+        "n_segments": len(engine.segments),
+        "reps": int(reps),
+    }
+
+
+def _cost_model_rows(ds_name: str, dw, table: dict) -> dict:
+    """Measure + record the per-bucket cost model on the benchmark
+    store; the scheduler-facing JSON is written by ``run()``."""
+    from repro.core.tokenizer import term_query_tokens
+    from repro.logstore.datasets import id_queries
+
+    token_lists = [term_query_tokens(t) for t in id_queries(29, 16)]
+    model = measure_dispatch_costs(dw.engine, token_lists)
+    table[f"{ds_name}/dispatch_cost/host_us_per_query"] = \
+        model["host_us_per_query"]
+    for b, us in model["device_us_per_wave"].items():
+        table[f"{ds_name}/dispatch_cost/device_us_per_wave/{b}"] = us
+    print(f"[query] {ds_name:14s} {'dispatch_cost':16s} host      "
+          f"{model['host_us_per_query']:10.2f} us/query", flush=True)
+    for b, us in model["device_us_per_wave"].items():
+        print(f"[query] {ds_name:14s} {'dispatch_cost':16s} wave Q={b:<4s}"
+              f"{us:10.2f} us/wave", flush=True)
+    return model
 
 
 def _time_waves(fn, *, min_time_s: float = 0.5):
@@ -94,6 +172,7 @@ def _sharded_query_rows(ds_name: str, ds, table: dict):
 
 def run(results: dict):
     table = {}
+    cost_model = None
     for ds_name in DATASETS:
         ds = load_dataset(ds_name)
         stores = {n: build_store(n, ds)
@@ -107,6 +186,9 @@ def run(results: dict):
                       f"{qps:10.2f} q/s", flush=True)
         _device_query_rows(ds_name, stores["dynawarp"], table)
         _sharded_query_rows(ds_name, ds, table)
+        # the LAST (largest) dataset's model is the one the scheduler
+        # loads — closest to production segment counts
+        cost_model = _cost_model_rows(ds_name, stores["dynawarp"], table)
         # paper headline: needle-in-haystack speedup vs linear scan
         base = table[f"{ds_name}/term(ID)/scan"]
         for sname in ("dynawarp", "csc", "lucene"):
@@ -114,4 +196,10 @@ def run(results: dict):
             table[f"{ds_name}/term(ID)/{sname}_speedup_vs_scan"] = round(spd, 1)
             print(f"[query] {ds_name} term(ID) {sname} speedup vs scan: "
                   f"{spd:.0f}x", flush=True)
+    if cost_model is not None:
+        with open(COST_MODEL_OUT, "w") as f:
+            json.dump(cost_model, f, indent=1)
+        print(f"[query] wrote serving cost model -> {COST_MODEL_OUT}",
+              flush=True)
     results["query_throughput"] = table
+    results["dispatch_cost_model"] = cost_model

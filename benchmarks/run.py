@@ -9,6 +9,8 @@
   probe_bench       — beyond-paper batched device probe
   live_tail         — beyond-paper live ingest: per-spill publish cost,
                       snapshot/live query rates, crash-recovery latency
+  serve_load        — beyond-paper serving: coalesced waves vs per-query
+                      dispatch under open-loop client load
   roofline          — §Roofline table from the dry-run artifact
 
 ``python -m benchmarks.run [--only name]`` writes bench_results.json.
@@ -20,7 +22,7 @@ import time
 
 from . import (dedup_stats, disk_usage, error_rate, ingest_speed,
                live_tail, probe_bench, query_throughput, roofline,
-               scan_rate)
+               scan_rate, serve_load)
 
 MODULES = {
     "ingest_speed": ingest_speed,
@@ -31,6 +33,7 @@ MODULES = {
     "dedup_stats": dedup_stats,
     "probe_bench": probe_bench,
     "live_tail": live_tail,
+    "serve_load": serve_load,
     "roofline": roofline,
 }
 

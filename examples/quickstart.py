@@ -1,12 +1,14 @@
 """Quickstart: ingest logs, seal the segment, run term/contains queries,
-then make the store durable — save to disk, reopen, query again — and
-finally survive a crash mid-ingest: open() the unfinished store, resume
-appending, finish().
+then make the store durable — save to disk, reopen, query again — then
+survive a crash mid-ingest (open() the unfinished store, resume
+appending, finish()), and finally SERVE the store: many concurrent
+clients coalesced into shape-bucketed engine waves.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import tempfile
+import threading
 
 from repro.logstore.datasets import generate_dataset
 from repro.logstore.store import DynaWarpStore
@@ -83,3 +85,32 @@ with tempfile.TemporaryDirectory() as tmp:
     print(f"resumed + finished: term 'alice' matches in-RAM store: "
           f"{r.matches == store.query_term('alice').matches}")
     resumed.close()
+
+# 9. serve it: store.serving() puts a wave-coalescing scheduler in front
+# of the engine — concurrent clients' queries group into shape-bucketed
+# waves (deadline- or size-flushed, max_live_waves admission control),
+# and a measured cost model picks the host or device path per wave.
+# Build one with `make bench-smoke-serve`, then pass
+# cost_model=CostModel.load() to use measured costs.
+seg_store = DynaWarpStore(batch_lines=128, mode="segmented",
+                          memory_limit_bytes=1 << 16)
+seg_store.ingest(ds.lines)
+seg_store.finish()
+server = seg_store.serving(n_replicas=2, flush_deadline_s=0.005)
+hits: list[int] = []
+
+def client():
+    for term in ("alice", "jndi", "error"):
+        hits.append(len(server.query_term(term, timeout=60).matches))
+
+clients = [threading.Thread(target=client) for _ in range(8)]
+for c in clients:
+    c.start()
+for c in clients:
+    c.join(timeout=120)
+st = server.scheduler.stats()
+print(f"served {st.completed} queries from {len(clients)} clients in "
+      f"{st.waves} coalesced waves ({st.host_waves} host / "
+      f"{st.device_waves} device), answers match direct queries: "
+      f"{hits.count(len(store.query_term('alice').matches)) >= 8}")
+server.close()

@@ -97,6 +97,38 @@ Beyond-paper crash-safe live-ingest knobs (PR 6), also
   * ``compact_backoff_s`` — initial retry backoff in seconds (0.05 by
     default); doubles per retry, capped at 30 s.  The backoff sleeps
     interruptibly so ``close()`` never waits out a pending retry.
+
+Beyond-paper serving knobs (PR 9, wave-coalescing front end).  Unlike
+the store knobs above these parameterize ``DynaWarpStore.serving()`` /
+``repro.core.serving.WaveScheduler`` (same names), the layer that turns
+concurrent client queries into shape-bucketed engine waves:
+  * ``serve_replicas`` — engine replicas behind the one wave queue
+    (``QueryEngine.clone()`` per extra replica — clones share every
+    per-segment device buffer, so a replica costs jit cache entries,
+    not segment uploads).  Waves round-robin across replicas, each
+    guarded by its own lock, so up to ``min(serve_replicas,
+    max_live_waves)`` waves execute truly concurrently.
+  * ``max_live_waves`` — admission control: at most this many waves in
+    flight at once.  When saturated the dispatcher HOLDS further
+    flushes — arrivals keep coalescing into bigger waves — and once
+    ``serve_max_pending`` queries queue, ``submit()`` blocks the
+    client (backpressure; queries are never dropped).
+  * ``flush_deadline_s`` — a coalescing group flushes as a wave when
+    its oldest request ages past this deadline (a lone straggler waits
+    at most this long) or when it reaches the largest wave bucket,
+    whichever comes first.
+  * ``wave_bucket_sizes`` — sorted supported Q buckets; a flushed wave
+    pads up to the smallest covering bucket (and unpads on
+    completion), so steady-state serving hits one jit cache entry per
+    bucket instead of one per wave size.  Must mirror the engine's
+    power-of-two padding geometry.
+  * ``serve_max_pending`` — the backpressure bound above.
+  * ``cost_model_path`` — per-bucket dispatch-cost JSON emitted by
+    ``benchmarks/query_throughput.py`` (``bench_costmodel.json``);
+    loaded via ``repro.core.serving.CostModel.load`` it drives the
+    per-wave host-vs-device decision (``n_queries * host_us_per_query
+    <= device_us_per_wave[bucket]`` -> scalar host path).  ``None``
+    uses built-in placeholder costs.
 """
 from dataclasses import dataclass
 
@@ -130,6 +162,13 @@ class DynaWarpConfig:
     publish_per_spill: bool = True   # manifest swap at every spill
     compact_retry: int = 3           # worker retries before surfacing
     compact_backoff_s: float = 0.05  # initial retry backoff (doubles)
+    # wave-coalescing serving front end (core.serving, PR 9)
+    serve_replicas: int = 2          # engine replicas behind the queue
+    max_live_waves: int = 2          # admission: concurrent waves cap
+    flush_deadline_s: float = 0.002  # straggler flush deadline
+    wave_bucket_sizes: tuple = (8, 16, 32, 64, 128, 256)
+    serve_max_pending: int = 8192    # submit() blocks past this
+    cost_model_path: str | None = None   # bench_costmodel.json
     # distributed probe layout (launch/dryrun exercises these)
     segments_axis: str = "data"      # segments shard over data (x pod)
     words_axis: str = "model"        # bitmap words shard over model

@@ -131,6 +131,18 @@ class ShardedQueryEngine(QueryEngine):
             seg.set_shard_slot(slot)
             load[slot] += 1
 
+    # ------------------------------------------------------------- replicas
+    def clone(self) -> "ShardedQueryEngine":
+        """Serving replica on the same mesh: segments keep their shard
+        slots (stable, stored on the sketch) and their uploaded
+        per-shard rows, so a replica costs only fresh jit caches."""
+        return ShardedQueryEngine(self.segments, mesh=self.mesh,
+                                  shard_axes=self.shard_axes,
+                                  n_postings=self.n_postings,
+                                  lru_lists=self._lru_cap,
+                                  bitset_kernel=self._use_bitset_kernel,
+                                  extract_on_device=self._extract_on_device)
+
     # -------------------------------------------------------------- buckets
     def _seg_pad_key(self, seg) -> tuple:
         lb, lo = seg._level_layout()

@@ -332,6 +332,18 @@ class QueryEngine:
             self._bm_lru.popitem(last=False)
         return ids
 
+    # ------------------------------------------------------------ replicas
+    def clone(self) -> "QueryEngine":
+        """A cheap serving replica over the same segments: shares every
+        per-segment device cache (keyed process-globally for durable
+        segments, per-sketch otherwise) but owns its jit caches and
+        LRUs, so the serving layer can run concurrent waves on separate
+        replicas without cross-wave locking."""
+        return QueryEngine(self.segments, n_postings=self.n_postings,
+                           lru_lists=self._lru_cap,
+                           bitset_kernel=self._use_bitset_kernel,
+                           extract_on_device=self._extract_on_device)
+
     # ------------------------------------------------------------- sizing
     def index_bytes(self, **kw) -> int:
         return sum(s.size_bytes(**kw) for s in self.segments)

@@ -1,5 +1,13 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
+``--arch dynawarp`` (alias ``copr``) runs the log-store serving loop:
+a :class:`~repro.core.serving.StoreServer` wave scheduler over a store
+(freshly built, or ``--store <dir>`` to open a durable one), driven by
+a pool of concurrent clients; prints q/s, p50/p99 latency, and wave
+coalescing stats.  Knobs: ``--clients``, ``--requests`` (per client),
+``--replicas``, ``--max-live-waves``, ``--flush-deadline-ms``,
+``--cost-model <json>`` (from ``benchmarks/query_throughput.py``).
+
 LM archs: prefill a batch of prompts, then greedy-decode N tokens with
 the KV cache (the same prefill/decode_step the dry-run lowers at 32k).
 RecSys archs: batched scoring loop (serve kind) with latency stats.
@@ -14,6 +22,78 @@ import time
 import numpy as np
 
 
+def _serve_dynawarp(args) -> int:
+    import os
+    import threading
+
+    from ..core.serving import CostModel
+    from ..logstore.datasets import (generate_dataset, id_queries,
+                                     present_id_queries)
+    from ..logstore.store import DynaWarpStore
+
+    if args.store:
+        store = DynaWarpStore.open(args.store)
+        print(f"[serve] opened store {args.store}: "
+              f"{store.n_batches} batches, "
+              f"{len(store.segments)} segments", flush=True)
+        terms = id_queries(5, 16)       # contents unknown: generic probes
+    else:
+        ds = generate_dataset("serve", n_lines=args.lines, n_sources=24,
+                              seed=11)
+        store = DynaWarpStore(batch_lines=64, mode="segmented",
+                              memory_limit_bytes=1 << 15)
+        store.ingest(ds.lines)
+        store.finish()
+        print(f"[serve] built store: {store.n_batches} batches, "
+              f"{len(store.segments)} segments", flush=True)
+        terms = present_id_queries(ds, 5, 16)
+
+    cost_model = None
+    if args.cost_model and os.path.exists(args.cost_model):
+        cost_model = CostModel.load(args.cost_model)
+        print(f"[serve] cost model {args.cost_model}: "
+              f"host {cost_model.host_us_per_query:.0f} us/query",
+              flush=True)
+
+    server = store.serving(n_replicas=args.replicas,
+                           max_live_waves=args.max_live_waves,
+                           flush_deadline_s=args.flush_deadline_ms / 1e3,
+                           cost_model=cost_model)
+    lat: list[list[float]] = [[] for _ in range(args.clients)]
+
+    def client(ci: int) -> None:
+        rng = np.random.default_rng(ci)
+        for _ in range(args.requests):
+            term = terms[int(rng.integers(len(terms)))]
+            t0 = time.perf_counter()
+            server.query_term(term, timeout=120)
+            lat[ci].append(time.perf_counter() - t0)
+
+    server.query_term(terms[0], timeout=300)          # warm-up/compile
+    threads = [threading.Thread(target=client, args=(ci,), daemon=True)
+               for ci in range(args.clients)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=600)
+    dt = time.perf_counter() - t0
+    server.close()
+
+    lat_ms = np.asarray([x for per in lat for x in per]) * 1e3
+    st = server.scheduler.stats()
+    n = len(lat_ms)
+    print(f"[serve] {n} queries from {args.clients} clients in {dt:.2f}s "
+          f"({n / dt:.1f} q/s)  p50 {np.percentile(lat_ms, 50):.2f}ms  "
+          f"p99 {np.percentile(lat_ms, 99):.2f}ms", flush=True)
+    print(f"[serve] {st.waves} waves ({st.host_waves} host / "
+          f"{st.device_waves} device; {st.size_flushes} size / "
+          f"{st.deadline_flushes} deadline flushes), max wave "
+          f"{st.max_wave}, replicas used: "
+          f"{sorted(st.replica_waves)}", flush=True)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -21,7 +101,22 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
+    # log-store serving knobs (--arch dynawarp)
+    ap.add_argument("--store", default=None,
+                    help="durable store directory to open (dynawarp)")
+    ap.add_argument("--lines", type=int, default=6_000)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--max-live-waves", type=int, default=2)
+    ap.add_argument("--flush-deadline-ms", type=float, default=2.0)
+    ap.add_argument("--cost-model", default=None,
+                    help="bench_costmodel.json from query_throughput")
     args = ap.parse_args(argv)
+
+    if args.arch in ("dynawarp", "copr"):
+        if args.requests == 8:          # store default differs from LM
+            args.requests = 25
+        return _serve_dynawarp(args)
 
     import jax
     import jax.numpy as jnp

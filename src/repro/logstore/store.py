@@ -219,9 +219,12 @@ class LogStoreBase:
         self._n_lines = 0
         self.stats = IngestStats()
         self._finished = False
-        # LRU of decompressed + lowercased batches (query post-filter)
+        # LRU of decompressed + lowercased batches (query post-filter);
+        # the lock keeps concurrent serving readers off each other's
+        # OrderedDict mutations (decompression itself runs unlocked)
         self._batch_cache: OrderedDict[int, tuple] = OrderedDict()
         self._batch_cache_cap = batch_cache_size
+        self._batch_cache_lock = threading.Lock()
         # LRU of per-line fingerprints (repeated log lines re-tokenize
         # once; _index_line and the token stats share the same result)
         self._fp_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
@@ -316,16 +319,18 @@ class LogStoreBase:
     def _batch_lower(self, b: int) -> tuple[list[str], list[str]]:
         """(lines, lowercased lines) of batch ``b`` via a bounded LRU —
         repeated queries stop re-decompressing + re-lowercasing every
-        candidate batch."""
-        hit = self._batch_cache.get(b)
-        if hit is not None:
-            self._batch_cache.move_to_end(b)
-            return hit
+        candidate batch.  Thread-safe for concurrent serving readers."""
+        with self._batch_cache_lock:
+            hit = self._batch_cache.get(b)
+            if hit is not None:
+                self._batch_cache.move_to_end(b)
+                return hit
         lines = decompress_batch(self.blobs[b])
         entry = (lines, [ln.lower() for ln in lines])
-        self._batch_cache[b] = entry
-        if len(self._batch_cache) > self._batch_cache_cap:
-            self._batch_cache.popitem(last=False)
+        with self._batch_cache_lock:
+            self._batch_cache[b] = entry
+            if len(self._batch_cache) > self._batch_cache_cap:
+                self._batch_cache.popitem(last=False)
         return entry
 
     # ------------------------------------------------------------------ query
@@ -1005,6 +1010,36 @@ class DynaWarpStore(LogStoreBase):
         return self.engine.query_batch(
             [term_query_tokens(t) for t in terms], op="and")
 
+    # ---------------------------------------------------------------- serving
+    def serving(self, *, n_replicas: int = 1, **scheduler_kw):
+        """The wave-coalescing serving front end over this store
+        (:class:`~repro.core.serving.StoreServer`): many client threads
+        submit term/boolean queries, the scheduler coalesces them into
+        shape-bucketed engine waves with ``max_live_waves`` admission
+        control, and answers are bit-identical to direct
+        ``query_term_batch`` calls.
+
+        A FINISHED store serves itself (all batches).  An unfinished
+        segmented store serves :meth:`snapshot` views — point-in-time
+        prefixes that a background ``server.refresh()`` cadence
+        advances while the writer keeps ingesting; every answer stays
+        consistent with some published prefix.  ``n_replicas`` engine
+        replicas (cheap: shared per-segment device caches via
+        :meth:`~repro.core.query_engine.QueryEngine.clone`) let up to
+        ``max_live_waves`` waves overlap.  Close the server (context
+        manager or ``close()``) to drain its worker threads."""
+        from ..core.serving import StoreServer
+        if self._finished:
+            if self.engine is None:
+                raise ValueError("serving requires device_query=True")
+            return StoreServer(lambda: self, n_replicas=n_replicas,
+                               **scheduler_kw)
+        if self.mode != "segmented":
+            raise ValueError("serving an unfinished store requires "
+                             "mode='segmented' (snapshot readers)")
+        return StoreServer(self.snapshot, n_replicas=n_replicas,
+                           **scheduler_kw)
+
     # ------------------------------------------------------------- live reads
     def snapshot(self) -> "StoreSnapshot":
         """Point-in-time reader over the published prefix; safe to use
@@ -1042,6 +1077,7 @@ class StoreSnapshot:
         self.n_lines = self.batch_start[-1] if self.batch_start else 0
         self._batch_cache: OrderedDict[int, tuple] = OrderedDict()
         self._batch_cache_cap = 32
+        self._batch_cache_lock = threading.Lock()
 
     # -------------------------------------------------------- candidates
     def _candidates(self, tokens) -> np.ndarray:
@@ -1080,15 +1116,17 @@ class StoreSnapshot:
                 for c, t in zip(self.candidates_term_batch(terms), terms)]
 
     def _batch_lower(self, b: int) -> tuple[list[str], list[str]]:
-        hit = self._batch_cache.get(b)
-        if hit is not None:
-            self._batch_cache.move_to_end(b)
-            return hit
+        with self._batch_cache_lock:
+            hit = self._batch_cache.get(b)
+            if hit is not None:
+                self._batch_cache.move_to_end(b)
+                return hit
         lines = decompress_batch(self.blobs[b])
         entry = (lines, [ln.lower() for ln in lines])
-        self._batch_cache[b] = entry
-        if len(self._batch_cache) > self._batch_cache_cap:
-            self._batch_cache.popitem(last=False)
+        with self._batch_cache_lock:
+            self._batch_cache[b] = entry
+            if len(self._batch_cache) > self._batch_cache_cap:
+                self._batch_cache.popitem(last=False)
         return entry
 
     def _post_filter(self, candidates: np.ndarray, term: str,

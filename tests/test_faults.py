@@ -18,9 +18,16 @@ The contract under test (ISSUE 6):
 
 Run via ``make test-faults`` (executes this file on 1 device and on the
 forced 8-way host mesh).
+
+CI-hang guards: every dataset/query input is deterministically seeded
+(fixtures use fixed seeds; no test draws from an unseeded RNG), worker
+threads are daemonic with deadline-bounded loops, and every ``join``/
+``wait`` carries an explicit timeout followed by a liveness assert —
+a wedged thread fails the test instead of hanging the suite.
 """
 import os
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -28,6 +35,7 @@ import pytest
 from repro.core import faults
 from repro.logstore.store import DynaWarpStore, ScanStore
 
+TIMEOUT = 300           # ceiling for any single blocking wait (seconds)
 KW = dict(batch_lines=64, mode="segmented", memory_limit_bytes=1 << 14,
           auto_compact=False)
 
@@ -282,9 +290,13 @@ def test_concurrent_reader_sees_consistent_snapshots(small_dataset,
     errors: list = []
     checks = [0]
     done = threading.Event()
+    deadline = time.monotonic() + TIMEOUT
 
     def reader():
-        while not done.is_set() or checks[0] == 0:
+        # bounded loop: runs until the writer finishes (plus one check
+        # minimum) but never past the deadline, even if the writer hangs
+        while (not done.is_set() or checks[0] == 0) \
+                and time.monotonic() < deadline:
             snap = s.snapshot()
             try:
                 results = snap.query_term_batch(terms)
@@ -297,7 +309,7 @@ def test_concurrent_reader_sees_consistent_snapshots(small_dataset,
                     return
             checks[0] += 1
 
-    rt = threading.Thread(target=reader)
+    rt = threading.Thread(target=reader, daemon=True)
     rt.start()
     try:
         for i in range(0, len(small_dataset.lines), 100):
@@ -305,7 +317,8 @@ def test_concurrent_reader_sees_consistent_snapshots(small_dataset,
         s.finish()
     finally:
         done.set()
-        rt.join(timeout=300)
+        rt.join(timeout=TIMEOUT)
+    assert not rt.is_alive(), "reader thread wedged"
     assert not errors, errors[:3]
     assert checks[0] > 0
     s.close()
@@ -325,7 +338,7 @@ def test_worker_retries_transient_error_with_backoff(small_dataset,
     with faults.inject(crash_at="compact.mid_merge",
                        error=OSError("transient EIO"), times=1) as inj:
         s.request_compact(fanout=2)
-        merges = s.wait_compaction(timeout=300)
+        merges = s.wait_compaction(timeout=TIMEOUT)
     assert inj.fired == 1
     assert merges > 0 and len(s.segments) < n0
     assert s._worker.retries >= 1
@@ -348,13 +361,13 @@ def test_worker_surfaces_persistent_error_and_survives(small_dataset,
                        error=OSError("disk on fire")) as inj:
         s.request_compact(fanout=2)
         with pytest.raises(OSError, match="disk on fire"):
-            s.wait_compaction(timeout=300)
+            s.wait_compaction(timeout=TIMEOUT)
     assert inj.fired == 3                      # first try + 2 retries
     assert s._worker.retries == 2
     # the worker survived: a clean job still lands
     n0 = len(s.segments)
     s.request_compact(fanout=2)
-    assert s.wait_compaction(timeout=300) > 0
+    assert s.wait_compaction(timeout=TIMEOUT) > 0
     assert len(s.segments) < n0
     _assert_oracle_prefix(s, scan_oracle, _terms(small_dataset),
                           len(small_dataset.lines))
